@@ -1,0 +1,41 @@
+"""Fig. 8 — hit ratio (8a) and total utility (8b) vs the edge server's
+caching capacity C, for T2DRL / DDPG / SCHRS / RCARS."""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import EnvCfg
+from .common import save_json, train_and_eval
+
+METHODS = ("t2drl", "ddpg", "schrs", "rcars")
+
+
+def run(capacities=(20.0, 26.0, 32.0), episodes: int = 120, seed: int = 0,
+        verbose=True):
+    out = {"episodes": episodes, "capacities": list(capacities),
+           "results": {}}
+    for C in capacities:
+        env = EnvCfg(U=10, M=10, T=10, K=10, C=C)
+        for method in METHODS:
+            _, ev = train_and_eval(method, env=env, episodes=episodes,
+                                   seed=seed)
+            out["results"][f"{method}_C{int(C)}"] = ev
+            if verbose:
+                print(f"C={C:4.0f} {method:6s}: hit={ev['hit_ratio']:.3f} "
+                      f"G={ev['utility']:8.2f} [{ev['train_s']}s]",
+                      flush=True)
+    save_json("cache.json", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--capacities", type=float, nargs="+",
+                    default=[20.0, 26.0, 32.0])
+    ap.add_argument("--episodes", type=int, default=120)
+    args = ap.parse_args()
+    run(tuple(args.capacities), args.episodes)
+
+
+if __name__ == "__main__":
+    main()

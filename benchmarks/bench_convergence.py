@@ -1,0 +1,56 @@
+"""Fig. 6 — convergence performance.
+
+6a: T2DRL episodic reward for different denoising-step counts L.
+6b: T2DRL vs DDPG-based T2DRL reward curves.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import EnvCfg
+from .common import history_to_list, save_json, train_and_eval
+
+
+def run(episodes: int = 150, Ls=(1, 5, 10), seed: int = 0, verbose=True):
+    env = EnvCfg(U=10, M=10, T=10, K=10)
+    out = {"episodes": episodes, "curves": {}}
+
+    # Fig 6a: denoising-step sweep
+    for L in Ls:
+        hist, ev = train_and_eval("t2drl", env=env, episodes=episodes, L=L,
+                                  seed=seed)
+        r = np.asarray(hist["episode_reward"])
+        out["curves"][f"t2drl_L{L}"] = history_to_list(hist)
+        out[f"t2drl_L{L}"] = {
+            "final_reward_mean_last10": float(r[-10:].mean()), **ev}
+        if verbose:
+            print(f"T2DRL L={L:2d}: reward(last10)={r[-10:].mean():9.2f} "
+                  f"hit={ev['hit_ratio']:.3f} G={ev['utility']:.2f} "
+                  f"[{ev['train_s']}s]", flush=True)
+
+    # Fig 6b: DDPG baseline
+    hist, ev = train_and_eval("ddpg", env=env, episodes=episodes, seed=seed)
+    r = np.asarray(hist["episode_reward"])
+    out["curves"]["ddpg"] = history_to_list(hist)
+    out["ddpg"] = {"final_reward_mean_last10": float(r[-10:].mean()), **ev}
+    if verbose:
+        print(f"DDPG      : reward(last10)={r[-10:].mean():9.2f} "
+              f"hit={ev['hit_ratio']:.3f} G={ev['utility']:.2f} "
+              f"[{ev['train_s']}s]", flush=True)
+
+    save_json("convergence.json", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=150)
+    ap.add_argument("--Ls", type=int, nargs="+", default=[1, 5, 10])
+    args = ap.parse_args()
+    run(args.episodes, tuple(args.Ls))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""§Roofline — aggregate the dry-run JSON records into the per-(arch ×
+shape × mesh) roofline table (compute/memory/collective terms, bottleneck,
+MODEL_FLOPS ratio)."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun"):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, mesh: str = "pod16x16"):
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        ro = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": ro["compute_s"], "memory_s": ro["memory_s"],
+            "collective_s": ro["collective_s"],
+            "bottleneck": ro["bottleneck"],
+            "useful_ratio": ro.get("useful_ratio"),
+            "arg_gib": r["memory"].get("argument_size_in_bytes", 0) / 2**30,
+            "tmp_gib": r["memory"].get("temp_size_in_bytes", 0) / 2**30,
+        })
+    return rows
+
+
+def run(dryrun_dir: str = "experiments/dryrun", verbose=True):
+    recs = load_records(dryrun_dir)
+    if not recs:
+        print("no dry-run records found — run `python -m "
+              "repro.launch.dryrun --all` first")
+        return []
+    out = {}
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = table(recs, mesh)
+        out[mesh] = rows
+        if verbose and rows:
+            print(f"\n== {mesh} ({len(rows)} pairs) ==")
+            for r in rows:
+                ur = f"{r['useful_ratio']:.3f}" if r["useful_ratio"] else "-"
+                print(f"{r['arch']:18s} {r['shape']:12s} "
+                      f"comp {r['compute_s']:9.4f} mem {r['memory_s']:9.4f} "
+                      f"coll {r['collective_s']:9.4f} -> "
+                      f"{r['bottleneck']:10s} useful={ur}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    run(args.dir)
+
+
+if __name__ == "__main__":
+    main()

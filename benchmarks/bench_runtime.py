@@ -1,0 +1,71 @@
+"""Table 3 — algorithm running time per time slot (ms) vs number of users.
+
+Measures the jitted per-slot *inference* path of each allocator on this host
+(CPU here, RTX A5000 in the paper — absolute numbers differ, the ordering
+SCHRS >> T2DRL > DDPG is the reproduced claim)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (EnvCfg, GACfg, T2DRLCfg, actor_act, env_reset,
+                        ga_allocate, make_actor_schedule, make_models,
+                        observe, t2drl_init)
+from .common import save_json
+
+
+def _time_fn(fn, *args, iters: int = 50) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3  # ms
+
+
+def run(users=(10, 12, 14, 16, 18), seed: int = 0, verbose=True):
+    out = {"users": list(users), "ms_per_slot": {}}
+    key = jax.random.PRNGKey(seed)
+    for U in users:
+        env = EnvCfg(U=U, M=10)
+        models = make_models(key, env)
+        state = env_reset(key, env)
+        state = state._replace(rho=jnp.ones(env.M))
+        s = observe(state, env, models)
+
+        for method in ("t2drl", "ddpg"):
+            cfg = T2DRLCfg(env=env, allocator="d3pg" if method == "t2drl"
+                           else "ddpg")
+            d3 = cfg.d3pg_cfg()
+            sched = make_actor_schedule(d3)
+            ts = t2drl_init(key, cfg)
+            act = jax.jit(lambda p, s, k: actor_act(p, d3, sched, s, k))
+            ms = _time_fn(act, ts["d3pg"]["actor"], s, key)
+            out["ms_per_slot"][f"{method}_U{U}"] = ms
+
+        ga = GACfg()
+        ga_fn = jax.jit(lambda k, st: ga_allocate(k, st, env, models, ga))
+        ms = _time_fn(ga_fn, key, state, iters=10)
+        out["ms_per_slot"][f"schrs_U{U}"] = ms
+        if verbose:
+            g = out["ms_per_slot"]
+            print(f"U={U:2d}  T2DRL {g[f't2drl_U{U}']:8.3f} ms   "
+                  f"DDPG {g[f'ddpg_U{U}']:8.3f} ms   "
+                  f"SCHRS {g[f'schrs_U{U}']:9.3f} ms", flush=True)
+    save_json("runtime.json", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", type=int, nargs="+",
+                    default=[10, 12, 14, 16, 18])
+    args = ap.parse_args()
+    run(tuple(args.users))
+
+
+if __name__ == "__main__":
+    main()

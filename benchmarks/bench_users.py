@@ -1,0 +1,39 @@
+"""Fig. 7 — GenAI model hit ratio (7a) and total utility (7b) vs the number
+of users, for T2DRL / DDPG-based T2DRL / SCHRS / RCARS."""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import EnvCfg
+from .common import save_json, train_and_eval
+
+METHODS = ("t2drl", "ddpg", "schrs", "rcars")
+
+
+def run(users=(10, 14, 18), episodes: int = 120, seed: int = 0,
+        verbose=True):
+    out = {"episodes": episodes, "users": list(users), "results": {}}
+    for U in users:
+        env = EnvCfg(U=U, M=10, T=10, K=10)
+        for method in METHODS:
+            _, ev = train_and_eval(method, env=env, episodes=episodes,
+                                   seed=seed)
+            out["results"][f"{method}_U{U}"] = ev
+            if verbose:
+                print(f"U={U:2d} {method:6s}: hit={ev['hit_ratio']:.3f} "
+                      f"G={ev['utility']:8.2f} reward={ev['mean_reward']:9.2f} "
+                      f"[{ev['train_s']}s]", flush=True)
+    save_json("users.json", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", type=int, nargs="+", default=[10, 14, 18])
+    ap.add_argument("--episodes", type=int, default=120)
+    args = ap.parse_args()
+    run(tuple(args.users), args.episodes)
+
+
+if __name__ == "__main__":
+    main()

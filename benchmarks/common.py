@@ -1,0 +1,68 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import T2DRLCfg, EnvCfg, eval_t2drl, t2drl_init, train_t2drl
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+# Tuned learning rates used for CI-scale convergence (the paper's 1e-6 is
+# reproduced in EXPERIMENTS.md but converges impractically slowly at the
+# reduced episode counts used here — see DESIGN.md §8 item 1).
+TUNED = dict(lr_actor=1e-4, lr_critic=1e-3, lr_ddqn=1e-3)
+
+
+def method_cfg(method: str, *, env: EnvCfg, episodes: int,
+               L: int = 5, **overrides) -> T2DRLCfg:
+    base = dict(env=env, episodes=episodes, L=L,
+                eps_decay_episodes=max(1, int(episodes * 0.6)),
+                warmup=100, **TUNED)
+    base.update(overrides)
+    if method == "t2drl":
+        return T2DRLCfg(allocator="d3pg", cacher="ddqn", **base)
+    if method == "ddpg":
+        return T2DRLCfg(allocator="ddpg", cacher="ddqn", **base)
+    if method == "schrs":
+        return T2DRLCfg(allocator="schrs", cacher="static", **base)
+    if method == "rcars":
+        return T2DRLCfg(allocator="rcars", cacher="random", **base)
+    raise ValueError(method)
+
+
+def train_and_eval(method: str, *, env: EnvCfg, episodes: int,
+                   eval_episodes: int = 5, L: int = 5, seed: int = 0,
+                   **overrides):
+    """Train (if learning-based) then greedy-eval.  Returns (history, eval)."""
+    cfg = method_cfg(method, env=env, episodes=episodes, L=L, seed=seed,
+                     **overrides)
+    t0 = time.time()
+    if method in ("t2drl", "ddpg"):
+        ts, hist = train_t2drl(cfg, episodes=episodes)
+    else:
+        ts = t2drl_init(jax.random.PRNGKey(cfg.seed), cfg)
+        hist = None
+    ev = eval_t2drl(ts, cfg, episodes=eval_episodes)
+    ev = {k: float(v) for k, v in ev.items()}
+    ev["train_s"] = round(time.time() - t0, 1)
+    return hist, ev
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def history_to_list(hist):
+    if hist is None:
+        return None
+    return {k: np.asarray(v).tolist() for k, v in hist.items()}

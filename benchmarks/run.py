@@ -1,0 +1,57 @@
+"""Benchmark harness entry point — one bench per paper table/figure.
+
+  python -m benchmarks.run             # quick pass (CI scale)
+  python -m benchmarks.run --full      # paper-scale episode counts
+  python -m benchmarks.run --only runtime,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma list: convergence,users,cache,runtime,"
+                         "roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    episodes = 500 if args.full else 60
+
+    def want(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    if want("runtime"):
+        print("== Table 3: per-slot running time ==", flush=True)
+        from . import bench_runtime
+        bench_runtime.run(users=(10, 12, 14, 16, 18))
+    if want("roofline"):
+        print("\n== §Roofline: dry-run table ==", flush=True)
+        from . import bench_roofline
+        bench_roofline.run()
+    if want("convergence"):
+        print("\n== Fig 6: convergence ==", flush=True)
+        from . import bench_convergence
+        bench_convergence.run(episodes=episodes,
+                              Ls=(1, 5, 10) if not args.full
+                              else (1, 5, 10, 20))
+    if want("users"):
+        print("\n== Fig 7: users sweep ==", flush=True)
+        from . import bench_users
+        bench_users.run(users=(10, 14, 18) if not args.full
+                        else (10, 12, 14, 16, 18), episodes=episodes)
+    if want("cache"):
+        print("\n== Fig 8: cache sweep ==", flush=True)
+        from . import bench_cache
+        bench_cache.run(capacities=(20.0, 26.0, 32.0) if not args.full
+                        else (20.0, 23.0, 26.0, 29.0, 32.0),
+                        episodes=episodes)
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s "
+          f"(results in experiments/bench/)")
+
+
+if __name__ == "__main__":
+    main()

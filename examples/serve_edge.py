@@ -1,0 +1,111 @@
+"""Edge AIGC gateway demo — the paper's full control loop against REAL
+model execution (beyond-paper: the paper only models the edge analytically).
+
+A trained T2DRL policy drives: DDQN picks which GenAI models the edge
+caches each frame; D3PG splits bandwidth/compute each slot; the gateway
+executes cached requests — diffusion image models run an actual DDPM
+reverse chain with xi*L steps, LM models generate real tokens through the
+continuous-batching engine.
+
+  PYTHONPATH=src python examples/serve_edge.py [--frames 3 --slots 4]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import (EnvCfg, T2DRLCfg, actor_act, amend_caching,
+                        amend_actions, ddqn_act, env_reset, make_actor_schedule,
+                        make_models, observe, t2drl_init, train_t2drl)
+from repro.core.env import env_new_frame, env_step_slot
+from repro.models import lm as lm_mod
+from repro.serving import CatalogEntry, EdgeGateway, Engine, ServeCfg
+from repro.serving.gateway import toy_diffusion_builder
+
+
+def build_catalogue(models, key):
+    """M=6 GenAI models: 4 diffusion image models + 2 smoke LMs from the
+    assigned-architecture pool."""
+    cat = []
+    for m in range(4):
+        cat.append(CatalogEntry(
+            model_id=m, name=f"repaint-{['faces','places','art','maps'][m]}",
+            kind="diffusion", size_gb=float(models.c[m]),
+            builder=toy_diffusion_builder(m, 64),
+            a1=float(models.a1[m]), a2=float(models.a2[m]),
+            a3=float(models.a3[m]), a4=float(models.a4[m]),
+            b1=float(models.b1[m]), b2=float(models.b2[m])))
+
+    def lm_builder(arch_name, seed):
+        def build():
+            cfg = get_arch(arch_name).make_smoke()
+            params = lm_mod.lm_init(jax.random.PRNGKey(seed), cfg)
+            return Engine(cfg, params, ServeCfg(max_batch=2, max_seq=128))
+        return build
+
+    for m, arch_name in ((4, "qwen2-0.5b"), (5, "mamba2-130m")):
+        cat.append(CatalogEntry(
+            model_id=m, name=f"{arch_name}-smoke", kind="lm",
+            size_gb=float(models.c[m]), builder=lm_builder(arch_name, m),
+            a1=float(models.a1[m]), a2=float(models.a2[m]),
+            a3=float(models.a3[m]), a4=float(models.a4[m]),
+            b1=float(models.b1[m]), b2=float(models.b2[m])))
+    return cat
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=3)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--train-episodes", type=int, default=30)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    env_cfg = EnvCfg(U=6, M=6, T=args.frames, K=args.slots, C=20.0)
+    cfg = T2DRLCfg(env=env_cfg, lr_actor=1e-4, lr_critic=1e-3,
+                   lr_ddqn=1e-3, episodes=args.train_episodes, warmup=20)
+
+    print(f"training T2DRL policy ({args.train_episodes} episodes)...")
+    ts, _ = train_t2drl(cfg)
+    models = ts["models"]
+    d3 = cfg.d3pg_cfg()
+    dq = cfg.ddqn_cfg()
+    sched = make_actor_schedule(d3)
+
+    gw = EdgeGateway(build_catalogue(models, key), capacity_gb=env_cfg.C,
+                     image_dim=64, total_steps=100)
+    env = env_reset(key, env_cfg)
+
+    for t in range(args.frames):
+        kf = jax.random.fold_in(key, 1000 + t)
+        a_int = ddqn_act(ts["ddqn"], dq, env.gamma_idx, kf, jnp.float32(0.0))
+        rho = amend_caching(a_int, dq, models.c, env_cfg.C)
+        env = env_new_frame(env, env_cfg, rho)
+        info = gw.apply_caching(np.asarray(rho))
+        print(f"\n== frame {t}: gamma={int(env.gamma_idx)} "
+              f"cache={np.flatnonzero(np.asarray(rho)).tolist()} "
+              f"loaded={sorted(gw.loaded)} used={info['used_gb']:.1f}GB "
+              f"(load {info['load_s']:.2f}s)")
+        for k in range(args.slots):
+            ks = jax.random.fold_in(kf, k)
+            s = observe(env, env_cfg, models)
+            raw = actor_act(ts["d3pg"]["actor"], d3, sched, s, ks)
+            b, xi = amend_actions(raw, env.req, env.rho, env_cfg.U)
+            results = gw.serve_slot(np.asarray(env.req), np.asarray(xi), ks)
+            env, r, m = env_step_slot(env, env_cfg, models, b, xi)
+            served = sum(1 for x in results if x.cached)
+            wall = sum(x.measured_wall_s for x in results)
+            print(f"  slot {k}: reward {float(r):8.2f} "
+                  f"hit {float(jnp.mean(m['cached'])):.2f} "
+                  f"edge-served {served}/{env_cfg.U} "
+                  f"(measured exec {wall:.2f}s, modeled "
+                  f"{sum(x.modeled_delay for x in results):.1f}s)")
+    print("\ndone — the paper's two-timescale control plane drove real "
+          "model loading and execution end-to-end.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Generate the §Dry-run and §Roofline markdown tables of EXPERIMENTS.md
+from experiments/dryrun/*.json.
+
+  PYTHONPATH=src python scripts/gen_experiments_tables.py > /tmp/tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+GIB = 2 ** 30
+
+
+def load(d="experiments/dryrun"):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / GIB:.2f}"
+
+
+def dryrun_table(recs, mesh):
+    rows = [r for r in recs if r["mesh"] == mesh
+            and r.get("opts", "base") == "base"]
+    out = [f"| arch | shape | status | params | arg GiB/dev | tmp GiB/dev | "
+           f"FLOPs/dev | coll bytes/dev | lower+compile s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order[r["shape"]]))
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP (see DESIGN.md) "
+                       f"| | | | | | |")
+            continue
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{r['n_params'] / 1e9:.2f}B | "
+            f"{fmt_bytes(m.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(m.get('temp_size_in_bytes', 0))} | "
+            f"{r['roofline']['flops_per_chip']:.2e} | "
+            f"{r['roofline']['coll_bytes_per_chip']:.2e} | "
+            f"{r['lower_s'] + r['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs, mesh):
+    rows = [r for r in recs if r["mesh"] == mesh and r["status"] == "ok"
+            and r.get("opts", "base") == "base"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order[r["shape"]]))
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO flops |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        ro = r["roofline"]
+        ur = ro.get("useful_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.4f} | "
+            f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+            f"**{ro['bottleneck']}** | "
+            f"{ur:.3f} |" if ur else
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.4f} | "
+            f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+            f"**{ro['bottleneck']}** | - |")
+    return "\n".join(out)
+
+
+def perf_variants_table(recs):
+    rows = [r for r in recs if r.get("opts", "base") != "base"
+            and r["status"] == "ok"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["opts"]))
+    out = ["| arch | shape | variant | compute s | memory s | collective s | "
+           "arg GiB | tmp GiB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        ro = r["roofline"]
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['opts']} | "
+            f"{ro['compute_s']:.4f} | {ro['memory_s']:.4f} | "
+            f"{ro['collective_s']:.4f} | "
+            f"{fmt_bytes(m.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(m.get('temp_size_in_bytes', 0))} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    for mesh in ("pod16x16", "pod2x16x16"):
+        n = sum(1 for r in recs if r["mesh"] == mesh)
+        if not n:
+            continue
+        print(f"\n### Dry-run — {mesh}\n")
+        print(dryrun_table(recs, mesh))
+        print(f"\n### Roofline — {mesh}\n")
+        print(roofline_table(recs, mesh))
+    print("\n### Perf variants\n")
+    print(perf_variants_table(recs))

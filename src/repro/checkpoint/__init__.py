@@ -1,0 +1,1 @@
+from .msgpack_ckpt import bf16_safe_cast, load_pytree, save_pytree  # noqa: F401

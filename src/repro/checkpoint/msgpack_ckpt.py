@@ -1,0 +1,78 @@
+"""msgpack pytree checkpointing with sharding-aware restore.
+
+Leaves are stored as {dtype, shape, raw bytes}; the tree structure is
+preserved as nested msgpack maps/lists.  ``load_pytree`` optionally takes a
+``shardings`` pytree (NamedSharding per leaf) and device_puts each restored
+leaf directly to its shards — no full-replica host copy per device.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_LEAF_KEY = "__leaf__"
+
+
+def _pack(tree):
+    if isinstance(tree, dict):
+        return {k: _pack(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {"__list__": [_pack(v) for v in tree],
+                "__tuple__": isinstance(tree, tuple)}
+    arr = np.asarray(tree)
+    dtype = "bfloat16" if arr.dtype == jnp.bfloat16 else arr.dtype.str
+    return {_LEAF_KEY: True, "dtype": dtype, "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _np_dtype(name: str):
+    if name == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+def _unpack(node, shardings=None):
+    if isinstance(node, dict) and node.get(_LEAF_KEY):
+        arr = np.frombuffer(node["data"], dtype=_np_dtype(node["dtype"]))
+        arr = arr.reshape(node["shape"])
+        if shardings is not None:
+            return jax.device_put(arr, shardings)
+        return jnp.asarray(arr)
+    if isinstance(node, dict) and "__list__" in node:
+        shard_list = (shardings if isinstance(shardings, (list, tuple))
+                      else [None] * len(node["__list__"]))
+        vals = [_unpack(v, s) for v, s in zip(node["__list__"], shard_list)]
+        return tuple(vals) if node.get("__tuple__") else vals
+    if isinstance(node, dict):
+        return {k: _unpack(v, shardings[k] if isinstance(shardings, dict)
+                           else None)
+                for k, v in node.items()}
+    return node
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    tree = jax.tree.map(np.asarray, tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_pack(tree), use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, *, shardings: Optional[Any] = None) -> Any:
+    with open(path, "rb") as f:
+        node = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    return _unpack(node, shardings)
+
+
+def bf16_safe_cast(tree):
+    """numpy lacks bfloat16 — cast bf16 leaves to f32 on save."""
+    return jax.tree.map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        tree)

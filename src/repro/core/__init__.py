@@ -1,0 +1,14 @@
+"""The paper's contribution: two-timescale model caching + resource
+allocation for edge AIGC services (environment, D3PG, DDQN, baselines,
+T2DRL driver)."""
+from .env import (EnvCfg, EnvState, ModelParams, env_reset,  # noqa: F401
+                  env_new_frame, env_step_slot, make_models, observe,
+                  slot_metrics, slot_reward)
+from .quality import tv_quality, gen_delay  # noqa: F401
+from .ddqn import DDQNCfg, amend_caching, ddqn_act, ddqn_init, ddqn_update  # noqa: F401
+from .d3pg import (D3PGCfg, actor_act, amend_actions, critic_q, d3pg_init,  # noqa: F401
+                   d3pg_update, make_actor_schedule)
+from .baselines import (GACfg, ga_allocate, random_cache, rcars_allocate,  # noqa: F401
+                        static_popular_cache)
+from .t2drl import (T2DRLCfg, eval_t2drl, run_episode, t2drl_init,  # noqa: F401
+                    train_t2drl)

@@ -1,0 +1,130 @@
+"""Benchmark solutions (paper Sec. 7.2).
+
+SCHRS — static caching (most popular models under gamma_1 = 0.2, greedy fill
+to capacity) + per-slot genetic algorithm over allocation chromosomes with
+simulated-binary crossover (SBX) and polynomial mutation.
+
+RCARS — random caching to capacity + equal bandwidth / compute split.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .d3pg import amend_actions
+from .env import EnvCfg, EnvState, ModelParams, slot_metrics, slot_reward
+
+
+# -- caching policies ---------------------------------------------------------
+
+def static_popular_cache(models: ModelParams, cfg: EnvCfg) -> jnp.ndarray:
+    """Cache the most popular models (Zipf rank = model id) greedily until
+    the capacity C is exhausted (skipping models that do not fit)."""
+    def body(carry, cm):
+        used, = carry
+        take = (used + cm) <= cfg.C
+        return (used + jnp.where(take, cm, 0.0),), take.astype(jnp.float32)
+    (_,), rho = jax.lax.scan(body, (jnp.float32(0.0),), models.c)
+    return rho
+
+
+def random_cache(key, models: ModelParams, cfg: EnvCfg) -> jnp.ndarray:
+    """Random order greedy fill (RCARS)."""
+    perm = jax.random.permutation(key, cfg.M)
+    def body(carry, m):
+        used, rho = carry
+        take = (used + models.c[m]) <= cfg.C
+        rho = rho.at[m].set(take.astype(jnp.float32))
+        return (used + jnp.where(take, models.c[m], 0.0), rho), None
+    (_, rho), _ = jax.lax.scan(body, (jnp.float32(0.0),
+                                      jnp.zeros(cfg.M)), perm)
+    return rho
+
+
+# -- RCARS allocation ---------------------------------------------------------
+
+def rcars_allocate(state: EnvState, cfg: EnvCfg):
+    b = jnp.full((cfg.U,), 1.0 / cfg.U)
+    gate = state.rho[state.req]
+    xi = gate / (jnp.sum(gate) + 1e-9)
+    return b, xi
+
+
+# -- SCHRS genetic algorithm ----------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GACfg:
+    pop: int = 40
+    gens: int = 40
+    eta_c: float = 15.0     # SBX distribution index
+    eta_m: float = 20.0     # polynomial-mutation distribution index
+    pm: float = 0.08        # per-gene mutation probability
+    pc: float = 0.9         # crossover probability
+
+
+def _sbx(key, p1, p2, eta):
+    u = jax.random.uniform(key, p1.shape)
+    beta = jnp.where(u <= 0.5,
+                     (2.0 * u) ** (1.0 / (eta + 1.0)),
+                     (1.0 / (2.0 * (1.0 - u) + 1e-12)) ** (1.0 / (eta + 1.0)))
+    c1 = 0.5 * ((1 + beta) * p1 + (1 - beta) * p2)
+    c2 = 0.5 * ((1 - beta) * p1 + (1 + beta) * p2)
+    return jnp.clip(c1, 0.0, 1.0), jnp.clip(c2, 0.0, 1.0)
+
+
+def _poly_mutation(key, x, eta, pm):
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, x.shape)
+    delta = jnp.where(u < 0.5,
+                      (2.0 * u) ** (1.0 / (eta + 1.0)) - 1.0,
+                      1.0 - (2.0 * (1.0 - u)) ** (1.0 / (eta + 1.0)))
+    mutate = jax.random.uniform(k2, x.shape) < pm
+    return jnp.clip(x + jnp.where(mutate, delta, 0.0), 0.0, 1.0)
+
+
+def ga_allocate(key, state: EnvState, cfg: EnvCfg, models: ModelParams,
+                ga: GACfg = GACfg()):
+    """Evolve allocation chromosomes for the current slot; returns (b, xi).
+
+    Fitness = the slot objective (12) plus the deadline penalty of (23), so
+    the GA respects constraint (11h) the same way the DRL agents do."""
+    U = cfg.U
+
+    def fitness(chrom):
+        b, xi = amend_actions(chrom, state.req, state.rho, U)
+        m = slot_metrics(state, cfg, models, b, xi)
+        viol = (m["d_tl"] > cfg.tau).astype(jnp.float32)
+        return jnp.mean(m["G"] + viol * cfg.chi)
+
+    k0, key = jax.random.split(key)
+    pop = jax.random.uniform(k0, (ga.pop, 2 * U))
+    fit = jax.vmap(fitness)(pop)
+
+    def gen(carry, k):
+        pop, fit = carry
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        # binary tournament selection
+        idx = jax.random.randint(k1, (2, ga.pop), 0, ga.pop)
+        winners = jnp.where((fit[idx[0]] < fit[idx[1]])[:, None],
+                            pop[idx[0]], pop[idx[1]])
+        # SBX on consecutive pairs
+        p1, p2 = winners[0::2], winners[1::2]
+        c1, c2 = _sbx(k2, p1, p2, ga.eta_c)
+        do_cx = (jax.random.uniform(k3, (ga.pop // 2, 1)) < ga.pc)
+        c1 = jnp.where(do_cx, c1, p1)
+        c2 = jnp.where(do_cx, c2, p2)
+        children = jnp.concatenate([c1, c2], axis=0)
+        children = _poly_mutation(k4, children, ga.eta_m, ga.pm)
+        child_fit = jax.vmap(fitness)(children)
+        # elitism: keep the best individual seen so far
+        best = jnp.argmin(fit)
+        children = children.at[0].set(pop[best])
+        child_fit = child_fit.at[0].set(fit[best])
+        return (children, child_fit), None
+
+    (pop, fit), _ = jax.lax.scan(gen, (pop, fit),
+                                 jax.random.split(key, ga.gens))
+    best = pop[jnp.argmin(fit)]
+    return amend_actions(best, state.req, state.rho, U)

@@ -1,0 +1,30 @@
+"""Fixed-capacity cyclic replay buffers as pure pytrees (jit-friendly)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def buffer_init(capacity: int, item_example):
+    """item_example: pytree of arrays defining per-item shapes/dtypes."""
+    data = jax.tree.map(
+        lambda a: jnp.zeros((capacity,) + jnp.shape(a), jnp.asarray(a).dtype),
+        item_example)
+    return {"data": data, "ptr": jnp.int32(0), "size": jnp.int32(0)}
+
+
+def _capacity(buf) -> int:
+    return jax.tree.leaves(buf["data"])[0].shape[0]
+
+
+def buffer_add(buf, item):
+    ptr = buf["ptr"]
+    data = jax.tree.map(lambda d, x: d.at[ptr].set(x), buf["data"], item)
+    cap = _capacity(buf)
+    return {"data": data, "ptr": (ptr + 1) % cap,
+            "size": jnp.minimum(buf["size"] + 1, cap)}
+
+
+def buffer_sample(buf, key, batch: int):
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf["size"], 1))
+    return jax.tree.map(lambda d: d[idx], buf["data"])

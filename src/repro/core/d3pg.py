@@ -1,0 +1,147 @@
+"""D3PG — diffusion-based deep deterministic policy gradient (paper Sec. 6.2).
+
+The actor is a conditional DDPM reverse chain (``repro.diffusion``): action =
+L denoising steps from N(0, I), conditioned on the slot state s_t(k).  The
+critic is the paper's 2×256 MLP.  Training backpropagates the deterministic
+policy gradient (26) through the whole reverse chain.  Setting
+``actor_kind="mlp"`` recovers the DDPG-based T2DRL baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion import (denoiser_init, make_schedule,
+                             reverse_sample_actions)
+from repro.optim import adam_init, adam_update
+from .networks import mlp_apply, mlp_init, soft_update
+
+
+@dataclasses.dataclass(frozen=True)
+class D3PGCfg:
+    state_dim: int
+    action_dim: int
+    L: int = 5                       # denoising steps (paper Fig. 6a -> 5)
+    actor_kind: str = "diffusion"    # "diffusion" (D3PG) | "mlp" (DDPG)
+    actor_hidden: int = 128          # paper: 3 FC layers of 128 (denoiser)
+    actor_layers: int = 3
+    critic_hidden: int = 256         # paper: 2 FC layers of 256
+    critic_layers: int = 2
+    lr_actor: float = 1e-6
+    lr_critic: float = 1e-6
+    omega: float = 0.95              # discount
+    eps_target: float = 0.005        # target update rate (28)-(29)
+    batch: int = 64
+    buffer: int = 10000
+    beta_min: float = 0.1
+    beta_max: float = 10.0
+    explore_sigma: float = 0.1       # Gaussian exploration on raw actions
+
+
+def make_actor_schedule(cfg: D3PGCfg):
+    return make_schedule(cfg.L, beta_min=cfg.beta_min, beta_max=cfg.beta_max,
+                         kind="paper")
+
+
+def d3pg_init(key, cfg: D3PGCfg):
+    ka, kc = jax.random.split(key)
+    if cfg.actor_kind == "diffusion":
+        actor = denoiser_init(ka, cfg.state_dim, cfg.action_dim,
+                              hidden=cfg.actor_hidden,
+                              n_layers=cfg.actor_layers)
+    else:
+        dims = ([cfg.state_dim] + [cfg.actor_hidden] * cfg.actor_layers
+                + [cfg.action_dim])
+        actor = mlp_init(ka, dims)
+    critic = mlp_init(kc, [cfg.state_dim + cfg.action_dim]
+                      + [cfg.critic_hidden] * cfg.critic_layers + [1])
+    return {"actor": actor,
+            "actor_t": jax.tree.map(jnp.copy, actor),
+            "critic": critic,
+            "critic_t": jax.tree.map(jnp.copy, critic),
+            "opt_a": adam_init(actor), "opt_c": adam_init(critic)}
+
+
+def actor_act(actor_params, cfg: D3PGCfg, sched, state, key, *,
+              impl: str = "xla"):
+    """Raw action in [0,1]^A.  state: (..., S)."""
+    if cfg.actor_kind == "diffusion":
+        return reverse_sample_actions(actor_params, sched, state, key,
+                                      cfg.action_dim, impl=impl)
+    x = mlp_apply(actor_params, state, final_act=jnp.tanh)
+    return 0.5 * (x + 1.0)
+
+
+def critic_q(critic_params, state, action):
+    return mlp_apply(critic_params, jnp.concatenate([state, action],
+                                                    axis=-1))[..., 0]
+
+
+def amend_actions(raw, req, rho, U: int, *, b_floor: float = 0.01):
+    """The paper's action amender: project raw [0,1]^{2U} onto the bandwidth
+    simplex (11e) and the cache-gated compute simplex (11f)-(11g).
+
+    ``b_floor`` adds a small pseudo-count before normalising the bandwidth
+    shares: a raw share of exactly 0 would give a user zero rate and an
+    unbounded upload delay (Eq. 2 -> Eq. 4), which explodes the reward scale
+    and destabilises the critic.  This is a numerical guard, not a change to
+    the constraint set — the amended b still lies on the simplex (11e)."""
+    b_t, xi_t = raw[..., :U], raw[..., U:]
+    b_t = b_t + b_floor
+    b = b_t / (jnp.sum(b_t, axis=-1, keepdims=True) + 1e-9)
+    gate = rho[..., req] if rho.ndim == 1 else jnp.take_along_axis(rho, req, axis=-1)
+    xi = xi_t * gate / (jnp.sum(gate * xi_t, axis=-1, keepdims=True) + 1e-9)
+    return b, xi
+
+
+def d3pg_update(params, cfg: D3PGCfg, sched, batch, key, *,
+                lr_a=None, lr_c=None, impl: str = "xla"):
+    """One minibatch step of Eqs. (24)-(29).
+
+    batch: {s, a, r, s1, req1, rho1} — a is the *amended* action executed;
+    the target action for s1 is re-amended using req1/rho1."""
+    lr_a = cfg.lr_actor if lr_a is None else lr_a
+    lr_c = cfg.lr_critic if lr_c is None else lr_c
+    k_t, k_pi = jax.random.split(key)
+    U = cfg.action_dim // 2
+
+    # --- critic (24) ---------------------------------------------------------
+    raw1 = actor_act(params["actor_t"], cfg, sched, batch["s1"], k_t,
+                     impl=impl)
+    b1, xi1 = jax.vmap(amend_actions, in_axes=(0, 0, 0, None))(
+        raw1, batch["req1"], batch["rho1"], U)
+    a1 = jnp.concatenate([b1, xi1], axis=-1)
+    y_hat = batch["r"] + cfg.omega * critic_q(params["critic_t"],
+                                              batch["s1"], a1)
+    y_hat = jax.lax.stop_gradient(y_hat)
+
+    def critic_loss(c):
+        y = critic_q(c, batch["s"], batch["a"])
+        return jnp.mean(0.5 * (y_hat - y) ** 2)
+
+    c_loss, c_grads = jax.value_and_grad(critic_loss)(params["critic"])
+    critic_new, opt_c_new, _ = adam_update(c_grads, params["opt_c"],
+                                           params["critic"], lr=lr_c)
+
+    # --- actor (26)-(27): maximise Q(s, amend(pi(s))) ------------------------
+    def actor_loss(a_params):
+        raw = actor_act(a_params, cfg, sched, batch["s"], k_pi, impl=impl)
+        b, xi = jax.vmap(amend_actions, in_axes=(0, 0, 0, None))(
+            raw, batch["req"], batch["rho"], U)
+        act = jnp.concatenate([b, xi], axis=-1)
+        return -jnp.mean(critic_q(critic_new, batch["s"], act))
+
+    a_loss, a_grads = jax.value_and_grad(actor_loss)(params["actor"])
+    actor_new, opt_a_new, _ = adam_update(a_grads, params["opt_a"],
+                                          params["actor"], lr=lr_a)
+
+    new = {"actor": actor_new,
+           "actor_t": soft_update(params["actor_t"], actor_new,
+                                  cfg.eps_target),
+           "critic": critic_new,
+           "critic_t": soft_update(params["critic_t"], critic_new,
+                                   cfg.eps_target),
+           "opt_a": opt_a_new, "opt_c": opt_c_new}
+    return new, {"critic_loss": c_loss, "actor_loss": a_loss}

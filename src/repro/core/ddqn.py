@@ -1,0 +1,95 @@
+"""DDQN for the long-timescale model-caching subproblem P3 (paper Sec. 6.3).
+
+State: the popularity skewness state gamma(t) (one-hot over J).  Action: an
+integer in [0, 2^M) decoded to the caching vector rho by the paper's
+floor/mod amender; storage feasibility (11d) is encouraged via the penalty Xi
+in the frame reward (32).  A beyond-paper greedy-feasible amender (drop the
+largest cached model until (11d) holds) is available behind a flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam_init, adam_update
+from .networks import mlp_apply, mlp_init, soft_update
+
+
+@dataclasses.dataclass(frozen=True)
+class DDQNCfg:
+    M: int = 10                  # GenAI model types -> 2^M actions
+    J: int = 3                   # popularity states
+    hidden: int = 128            # paper: 2 FC layers of 128
+    n_hidden: int = 2
+    lr: float = 1e-6             # paper's Adam lr
+    rho: float = 0.9             # discount (frame-level)
+    kappa: float = 0.005         # target update rate (35)
+    batch: int = 32
+    buffer: int = 2048
+    feasible_amender: bool = False   # beyond-paper (off by default)
+
+    @property
+    def n_actions(self) -> int:
+        return 2 ** self.M
+
+
+def ddqn_init(key, cfg: DDQNCfg):
+    dims = [cfg.J] + [cfg.hidden] * cfg.n_hidden + [cfg.n_actions]
+    q = mlp_init(key, dims)
+    return {"q": q, "q_target": jax.tree.map(jnp.copy, q),
+            "opt": adam_init(q)}
+
+
+def _obs(gamma_idx, cfg: DDQNCfg):
+    return jax.nn.one_hot(gamma_idx, cfg.J)
+
+
+def ddqn_act(params, cfg: DDQNCfg, gamma_idx, key, eps):
+    """epsilon-greedy over the 2^M caching actions."""
+    qv = mlp_apply(params["q"], _obs(gamma_idx, cfg))
+    greedy = jnp.argmax(qv)
+    k1, k2 = jax.random.split(key)
+    rand = jax.random.randint(k1, (), 0, cfg.n_actions)
+    return jnp.where(jax.random.uniform(k2) < eps, rand, greedy).astype(jnp.int32)
+
+
+def amend_caching(a_int, cfg: DDQNCfg, c=None, C: float = 0.0):
+    """Paper's amender: rho_m = floor(a / 2^(M-m)) mod 2.  With
+    ``cfg.feasible_amender`` also greedily evicts the largest cached model
+    until the storage constraint (11d) holds."""
+    m = jnp.arange(1, cfg.M + 1)
+    rho = (a_int // (2 ** (cfg.M - m))) % 2
+    rho = rho.astype(jnp.float32)
+    if cfg.feasible_amender and c is not None:
+        def evict(_, rho):
+            over = jnp.sum(rho * c) > C
+            largest = jnp.argmax(rho * c)
+            return jnp.where(over, rho.at[largest].set(0.0), rho)
+        rho = jax.lax.fori_loop(0, cfg.M, evict, rho)
+    return rho
+
+
+def ddqn_update(params, cfg: DDQNCfg, batch, *, lr=None):
+    """One minibatch step of Eq. (33); batch: {s, a, r, s1} with s/s1 the
+    gamma indices.  Returns (params, loss)."""
+    lr = cfg.lr if lr is None else lr
+    s = _obs(batch["s"], cfg)
+    s1 = _obs(batch["s1"], cfg)
+
+    def loss_fn(q):
+        qv = mlp_apply(q, s)                          # (B, 2^M)
+        y = jnp.take_along_axis(qv, batch["a"][:, None], axis=1)[:, 0]
+        # action selection by the online net, evaluation by the target (33a)
+        a1 = jnp.argmax(mlp_apply(q, s1), axis=1)
+        q1 = mlp_apply(params["q_target"], s1)
+        y_hat = batch["r"] + cfg.rho * jnp.take_along_axis(
+            q1, a1[:, None], axis=1)[:, 0]
+        return jnp.mean(0.5 * (jax.lax.stop_gradient(y_hat) - y) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params["q"])
+    q_new, opt_new, _ = adam_update(grads, params["opt"], params["q"], lr=lr)
+    return {"q": q_new,
+            "q_target": soft_update(params["q_target"], q_new, cfg.kappa),
+            "opt": opt_new}, loss

@@ -1,0 +1,259 @@
+"""AIGC edge-service environment (paper Secs. 3-4), fully jittable.
+
+State evolves on two timescales: per-frame (AIGC popularity skewness gamma,
+a J-state Markov chain; caching decision rho held fixed) and per-slot (user
+location distribution lambda, an I-state Markov chain; Rayleigh fading drawn
+i.i.d.; per-user requests ~ Zipf(gamma)).
+
+All of Eqs. (1)-(10) and the reward (23) are implemented exactly; physical
+constants follow Table 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .quality import gen_delay, tv_quality
+
+MB_BITS = 8e6  # bits per MB
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvCfg:
+    U: int = 10                 # users
+    M: int = 10                 # GenAI model types
+    T: int = 10                 # frames per episode
+    K: int = 10                 # slots per frame
+    tau: float = 20.0           # slot duration (s) = deadline (11h)
+    L_steps: float = 1000.0     # total denoising steps at the BS
+    C: float = 20.0             # BS storage capacity (GB)
+    W_up: float = 20e6          # uplink bandwidth (Hz), shared
+    W_dw: float = 40e6          # per-user downlink bandwidth (Hz)
+    p_user_dbm: float = 23.0
+    p_bs_dbm: float = 43.0
+    n0_dbm_hz: float = -176.0   # noise PSD (dBm/Hz)
+    r_bc: float = 100e6         # BS->cloud backhaul (bps)
+    r_cb: float = 100e6         # cloud->BS backhaul (bps)
+    d_in_mb: Tuple[float, float] = (5.0, 10.0)
+    d_op_mb: Tuple[float, float] = (5.0, 10.0)
+    alpha: float = 0.7          # delay-vs-quality preference (10)
+    chi: float = 10.0           # deadline penalty (23)
+    Xi: float = 100.0           # storage penalty (32)
+    area: float = 250.0         # square side (m)
+    gammas: Tuple[float, ...] = (0.2, 0.5, 0.7)     # J popularity states
+    # Eq. (37) popularity transitions
+    P_gamma: Tuple[Tuple[float, ...], ...] = (
+        (0.6, 0.2, 0.2), (0.1, 0.7, 0.2), (0.2, 0.3, 0.5))
+    # Eq. (36) location-distribution transitions
+    P_lambda: Tuple[Tuple[float, ...], ...] = (
+        (0.6, 0.1, 0.3), (0.3, 0.6, 0.1), (0.1, 0.3, 0.6))
+
+    @property
+    def p_user(self) -> float:          # mW
+        return 10 ** (self.p_user_dbm / 10)
+
+    @property
+    def p_bs(self) -> float:            # mW
+        return 10 ** (self.p_bs_dbm / 10)
+
+    @property
+    def n0(self) -> float:              # mW/Hz
+        return 10 ** (self.n0_dbm_hz / 10)
+
+    @property
+    def state_dim(self) -> int:         # Eq. (21): 4U + M
+        return 4 * self.U + self.M
+
+    @property
+    def action_dim(self) -> int:        # Eq. (22): 2U
+        return 2 * self.U
+
+
+class ModelParams(NamedTuple):
+    """Per-GenAI-model fitted curve + storage parameters (Sec. 7.1)."""
+    a1: jnp.ndarray   # (M,) steps where quality starts improving  [50,100]
+    a2: jnp.ndarray   # (M,) worst TV                               [100,150]
+    a3: jnp.ndarray   # (M,) steps where quality saturates          [150,200]
+    a4: jnp.ndarray   # (M,) best TV                                (0,50]
+    b1: jnp.ndarray   # (M,) delay slope                            (0,0.5]
+    b2: jnp.ndarray   # (M,) delay intercept                        (0,10]
+    c: jnp.ndarray    # (M,) storage (GB)                           [2,10]
+    d_op: jnp.ndarray  # (M,) output size (bits)
+
+
+def make_models(key, cfg: EnvCfg) -> ModelParams:
+    ks = jax.random.split(key, 8)
+    u = lambda k, lo, hi: jax.random.uniform(k, (cfg.M,), minval=lo, maxval=hi)
+    return ModelParams(
+        a1=u(ks[0], 50.0, 100.0), a2=u(ks[1], 100.0, 150.0),
+        a3=u(ks[2], 150.0, 200.0), a4=u(ks[3], 1.0, 50.0),
+        b1=u(ks[4], 0.05, 0.5), b2=u(ks[5], 1.0, 10.0),
+        c=u(ks[6], 2.0, 10.0),
+        d_op=u(ks[7], cfg.d_op_mb[0], cfg.d_op_mb[1]) * MB_BITS)
+
+
+class EnvState(NamedTuple):
+    key: jnp.ndarray
+    gamma_idx: jnp.ndarray    # () int32 — popularity state (per frame)
+    lambda_idx: jnp.ndarray   # () int32 — location state (per slot)
+    pos: jnp.ndarray          # (U, 2) user positions (m)
+    h: jnp.ndarray            # (U,) channel gains (linear)
+    req: jnp.ndarray          # (U,) int32 requested model ids
+    d_in: jnp.ndarray         # (U,) input sizes (bits)
+    rho: jnp.ndarray          # (M,) float 0/1 caching decision
+
+
+# -- sampling -----------------------------------------------------------------
+
+def _sample_positions(key, lambda_idx, cfg: EnvCfg):
+    """lambda states: 0 uniform, 1 concentrated (around BS), 2 boundary."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    A = cfg.area
+    uni = jax.random.uniform(k1, (cfg.U, 2), minval=0.0, maxval=A)
+    conc = jnp.clip(A / 2 + 30.0 * jax.random.normal(k2, (cfg.U, 2)), 0.0, A)
+    edge = jax.random.uniform(k3, (cfg.U, 2), minval=0.0, maxval=A)
+    side = jax.random.randint(jax.random.fold_in(k3, 1), (cfg.U,), 0, 4)
+    off = jax.random.uniform(jax.random.fold_in(k3, 2), (cfg.U,),
+                             minval=0.0, maxval=15.0)
+    bx = jnp.where(side == 0, off, jnp.where(side == 1, A - off, edge[:, 0]))
+    by = jnp.where(side == 2, off, jnp.where(side == 3, A - off, edge[:, 1]))
+    bnd = jnp.stack([bx, by], axis=-1)
+    return jnp.where(lambda_idx == 0, uni,
+                     jnp.where(lambda_idx == 1, conc, bnd))
+
+
+def _channel_gain(key, pos, cfg: EnvCfg):
+    """h = g·|delta|^2, path loss Eq. (3) (distance in km), Rayleigh fading."""
+    bs = jnp.array([cfg.area / 2, cfg.area / 2])
+    dis_km = jnp.maximum(
+        jnp.linalg.norm(pos - bs, axis=-1), 1.0) / 1000.0
+    g_db = -128.1 - 37.6 * jnp.log10(dis_km)
+    g = 10.0 ** (g_db / 10.0)
+    rayleigh2 = jax.random.exponential(key, (pos.shape[0],))  # |CN(0,1)|^2
+    return g * rayleigh2
+
+
+def _sample_requests(key, gamma_idx, cfg: EnvCfg):
+    """Zipf over model ids, Eq. (1)."""
+    gamma = jnp.asarray(cfg.gammas)[gamma_idx]
+    ranks = jnp.arange(1, cfg.M + 1, dtype=jnp.float32)
+    logits = -gamma * jnp.log(ranks)
+    return jax.random.categorical(key, logits, shape=(cfg.U,))
+
+
+def _sample_markov(key, idx, P):
+    return jax.random.categorical(key, jnp.log(jnp.asarray(P)[idx] + 1e-12))
+
+
+def _refresh_slot(key, state: EnvState, cfg: EnvCfg,
+                  new_lambda: bool = True) -> EnvState:
+    """Draw per-slot randomness: location state, positions, fading,
+    requests, input sizes."""
+    kl, kp, kh, kr, kd, knext = jax.random.split(key, 6)
+    lam = (_sample_markov(kl, state.lambda_idx, cfg.P_lambda)
+           if new_lambda else state.lambda_idx)
+    pos = _sample_positions(kp, lam, cfg)
+    h = _channel_gain(kh, pos, cfg)
+    req = _sample_requests(kr, state.gamma_idx, cfg)
+    d_in = jax.random.uniform(kd, (cfg.U,), minval=cfg.d_in_mb[0],
+                              maxval=cfg.d_in_mb[1]) * MB_BITS
+    return EnvState(key=knext, gamma_idx=state.gamma_idx, lambda_idx=lam,
+                    pos=pos, h=h, req=req, d_in=d_in, rho=state.rho)
+
+
+def env_reset(key, cfg: EnvCfg) -> EnvState:
+    kg, kl, ks = jax.random.split(key, 3)
+    st = EnvState(
+        key=ks,
+        gamma_idx=jax.random.randint(kg, (), 0, len(cfg.gammas)),
+        lambda_idx=jax.random.randint(kl, (), 0, len(cfg.P_lambda)),
+        pos=jnp.zeros((cfg.U, 2)), h=jnp.ones((cfg.U,)),
+        req=jnp.zeros((cfg.U,), jnp.int32),
+        d_in=jnp.ones((cfg.U,)) * cfg.d_in_mb[0] * MB_BITS,
+        rho=jnp.zeros((cfg.M,)))
+    k, knext = jax.random.split(st.key)
+    return _refresh_slot(k, st._replace(key=knext), cfg, new_lambda=False)
+
+
+def env_advance_frame(state: EnvState, cfg: EnvCfg) -> EnvState:
+    """Frame boundary: popularity Markov transition; requests for the first
+    slot of the new frame are re-drawn under the new skewness.  The caching
+    decision for the frame is applied afterwards via ``env_set_cache`` —
+    Algorithm 1 observes s(t) = {gamma(t)} *before* choosing rho(t)."""
+    k, kr, knext = jax.random.split(state.key, 3)
+    gamma = _sample_markov(k, state.gamma_idx, cfg.P_gamma)
+    req = _sample_requests(kr, gamma, cfg)
+    return state._replace(key=knext, gamma_idx=gamma, req=req)
+
+
+def env_set_cache(state: EnvState, rho) -> EnvState:
+    return state._replace(rho=rho)
+
+
+def env_new_frame(state: EnvState, cfg: EnvCfg, rho) -> EnvState:
+    """Frame boundary: popularity Markov transition + new caching decision."""
+    return env_set_cache(env_advance_frame(state, cfg), rho)
+
+
+# -- slot dynamics (Eqs. 2-10, 23) --------------------------------------------
+
+def slot_metrics(state: EnvState, cfg: EnvCfg, models: ModelParams, b, xi):
+    """Compute per-user delay/quality/utility for allocation (b, xi)."""
+    cached = state.rho[state.req]                      # (U,) 0/1
+    b = jnp.maximum(b, 1e-9)
+    # Eq. (2): uplink rate
+    snr_up = cfg.p_user * state.h / (cfg.n0 * b * cfg.W_up)
+    r_up = b * cfg.W_up * jnp.log2(1.0 + snr_up)
+    # Eq. (4): upload delay (+ backhaul if not cached)
+    d_up = state.d_in / r_up + (1.0 - cached) * state.d_in / cfg.r_bc
+    # Eq. (5): downlink rate
+    snr_dw = cfg.p_bs * state.h / (cfg.n0 * cfg.W_dw)
+    r_dw = cfg.W_dw * jnp.log2(1.0 + snr_dw)
+    d_op = models.d_op[state.req]
+    # Eq. (6): feedback delay
+    d_dw = d_op / r_dw + (1.0 - cached) * d_op / cfg.r_cb
+    # Eqs. (7)-(8): generation quality / delay
+    steps = xi * cfg.L_steps
+    m = state.req
+    q_edge = tv_quality(steps, models.a1[m], models.a2[m], models.a3[m],
+                        models.a4[m])
+    q = jnp.where(cached > 0, q_edge, models.a4[m])
+    d_gt_edge = gen_delay(steps, models.b1[m], models.b2[m])
+    d_gt_cloud = models.b1[m] * models.a3[m] + models.b2[m]
+    d_gt = jnp.where(cached > 0, d_gt_edge, d_gt_cloud)
+    # Eq. (9)-(10)
+    d_tl = d_up + d_dw + d_gt
+    G = cfg.alpha * d_tl + (1.0 - cfg.alpha) * q
+    return {"G": G, "d_tl": d_tl, "quality": q, "delay_up": d_up,
+            "delay_dw": d_dw, "delay_gt": d_gt, "cached": cached,
+            "rate_up": r_up, "rate_dw": r_dw}
+
+
+def slot_reward(metrics, cfg: EnvCfg):
+    """Eq. (23)."""
+    viol = (metrics["d_tl"] > cfg.tau).astype(jnp.float32)
+    return -jnp.mean(metrics["G"] + viol * cfg.chi)
+
+
+def env_step_slot(state: EnvState, cfg: EnvCfg, models: ModelParams, b, xi):
+    """Execute allocation (b, xi) on the current slot, then draw the next
+    slot's randomness.  Returns (next_state, reward, metrics)."""
+    metrics = slot_metrics(state, cfg, models, b, xi)
+    r = slot_reward(metrics, cfg)
+    k, knext = jax.random.split(state.key)
+    nxt = _refresh_slot(k, state._replace(key=knext), cfg)
+    return nxt, r, metrics
+
+
+# -- observation (Eq. 21) -------------------------------------------------------
+
+def observe(state: EnvState, cfg: EnvCfg, models: ModelParams):
+    """s_t(k) = {h, phi, rho, d_in, d_op} normalised to O(1) ranges."""
+    h_n = (jnp.log10(state.h + 1e-30) + 12.0) / 5.0
+    req_n = state.req.astype(jnp.float32) / cfg.M
+    din_n = state.d_in / (cfg.d_in_mb[1] * MB_BITS)
+    dop_n = models.d_op[state.req] / (cfg.d_op_mb[1] * MB_BITS)
+    return jnp.concatenate([h_n, req_n, state.rho, din_n, dop_n])

@@ -1,0 +1,29 @@
+"""Plain MLP utilities for critic / Q networks (paper Sec. 7.1 topology)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_init(key, dims):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [{"w": (jax.random.normal(k, (i, o)) / math.sqrt(i)).astype(jnp.float32),
+             "b": jnp.zeros(o)}
+            for k, i, o in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp_apply(layers, x, *, final_act=None):
+    for layer in layers[:-1]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    x = x @ layers[-1]["w"] + layers[-1]["b"]
+    if final_act is not None:
+        x = final_act(x)
+    return x
+
+
+def soft_update(target, online, rate):
+    """Polyak averaging, Eqs. (28)-(29)/(35)."""
+    return jax.tree.map(lambda t, o: (1.0 - rate) * t + rate * o,
+                        target, online)

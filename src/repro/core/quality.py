@@ -1,0 +1,47 @@
+"""Fitted AIGC service models (paper Sec. 3.4, Fig. 3).
+
+Eq. (7): piecewise-linear TV quality vs. denoising steps — parameters
+A1 (steps where quality starts improving), A2 (worst TV), A3 (steps where
+quality saturates), A4 (best TV; lower TV = better image).
+
+Eq. (8): linear generation delay vs. denoising steps — D = B1·steps + B2.
+
+The paper fits A1=60, A2=110, A3=170, A4=28, B1=0.18, B2=5.74 for RePaint on
+an RTX A5000; the simulation draws per-model parameters from the ranges in
+Sec. 7.1 to emulate heterogeneous GenAI models.
+
+Beyond the paper: for non-diffusion model families served by the edge
+gateway the same curve shapes apply with the *decode token/step budget* as
+the compute knob (autoregressive quality saturates with budget; latency is
+affine in generated tokens) — see ``repro.serving.gateway``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Paper's fitted constants (RePaint / CelebA-HQ, Fig. 3)
+A1, A2, A3, A4 = 60.0, 110.0, 170.0, 28.0
+B1, B2 = 0.18, 5.74
+
+
+def tv_quality(steps, a1=A1, a2=A2, a3=A3, a4=A4):
+    """Eq. (7): TV value of the generated image after ``steps`` denoising
+    steps (lower is better).  Broadcasts over per-model parameter arrays."""
+    slope = (a4 - a2) / (a3 - a1)
+    mid = a2 + slope * (steps - a1)
+    return jnp.where(steps <= a1, a2, jnp.where(steps >= a3, a4, mid))
+
+
+def gen_delay(steps, b1=B1, b2=B2):
+    """Eq. (8): image generation time for ``steps`` denoising steps."""
+    return b1 * steps + b2
+
+
+def cloud_quality(a4=A4):
+    """Un-cached requests go to the cloud: best quality (Sec. 3.4.1)."""
+    return a4
+
+
+def cloud_delay(a3=A3, b1=B1, b2=B2):
+    """Cloud allocates the minimum steps reaching best quality (Sec. 3.4.2)."""
+    return b1 * a3 + b2

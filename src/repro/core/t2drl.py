@@ -1,0 +1,236 @@
+"""T2DRL — the paper's Algorithm 1: outer long-timescale DDQN (caching) +
+inner short-timescale D3PG (resource allocation), fully jitted per episode.
+
+``allocator``/``cacher`` select the agent combination, covering the paper's
+benchmarks:
+
+  T2DRL             allocator="d3pg",  cacher="ddqn"
+  DDPG-based T2DRL  allocator="ddpg",  cacher="ddqn"
+  SCHRS             allocator="schrs", cacher="static"
+  RCARS             allocator="rcars", cacher="random"
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .baselines import (GACfg, ga_allocate, random_cache, rcars_allocate,
+                        static_popular_cache)
+from .buffers import buffer_add, buffer_init, buffer_sample
+from .d3pg import (D3PGCfg, actor_act, amend_actions, d3pg_init, d3pg_update,
+                   make_actor_schedule)
+from .ddqn import DDQNCfg, amend_caching, ddqn_act, ddqn_init, ddqn_update
+from .env import (EnvCfg, EnvState, ModelParams, env_advance_frame,
+                  env_reset, env_set_cache, env_step_slot, make_models,
+                  observe)
+
+
+@dataclasses.dataclass(frozen=True)
+class T2DRLCfg:
+    env: EnvCfg = EnvCfg()
+    allocator: str = "d3pg"     # d3pg | ddpg | schrs | rcars
+    cacher: str = "ddqn"        # ddqn | static | random
+    episodes: int = 500
+    warmup: int = 200           # slot transitions before D3PG updates
+    eps_start: float = 1.0      # DDQN epsilon-greedy schedule (per episode)
+    eps_end: float = 0.05
+    eps_decay_episodes: int = 300
+    lr_actor: float = 1e-6      # paper default; benchmarks also run tuned lr
+    lr_critic: float = 1e-6
+    lr_ddqn: float = 1e-6
+    L: int = 5                  # D3PG denoising steps
+    seed: int = 0
+    ga: GACfg = GACfg()
+
+    def d3pg_cfg(self) -> D3PGCfg:
+        return D3PGCfg(state_dim=self.env.state_dim,
+                       action_dim=self.env.action_dim, L=self.L,
+                       actor_kind="mlp" if self.allocator == "ddpg"
+                       else "diffusion",
+                       lr_actor=self.lr_actor, lr_critic=self.lr_critic)
+
+    def ddqn_cfg(self) -> DDQNCfg:
+        return DDQNCfg(M=self.env.M, J=len(self.env.gammas),
+                       lr=self.lr_ddqn)
+
+
+def t2drl_init(key, cfg: T2DRLCfg):
+    km, kq, kd = jax.random.split(key, 3)
+    env = cfg.env
+    models = make_models(km, env)
+    d3 = cfg.d3pg_cfg()
+    dq = cfg.ddqn_cfg()
+    S, A, U, M = env.state_dim, env.action_dim, env.U, env.M
+    slot_item = {
+        "s": jnp.zeros(S), "a": jnp.zeros(A), "r": jnp.float32(0.0),
+        "s1": jnp.zeros(S), "req": jnp.zeros(U, jnp.int32),
+        "rho": jnp.zeros(M), "req1": jnp.zeros(U, jnp.int32),
+        "rho1": jnp.zeros(M),
+    }
+    frame_item = {"s": jnp.int32(0), "a": jnp.int32(0),
+                  "r": jnp.float32(0.0), "s1": jnp.int32(0)}
+    return {
+        "models": models,
+        "d3pg": d3pg_init(kd, d3),
+        "ddqn": ddqn_init(kq, dq),
+        "ebuf": buffer_init(d3.buffer, slot_item),
+        "fbuf": buffer_init(dq.buffer, frame_item),
+    }
+
+
+def episode_epsilon(cfg: T2DRLCfg, episode):
+    frac = jnp.clip(episode / max(cfg.eps_decay_episodes, 1), 0.0, 1.0)
+    return cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "train"))
+def run_episode(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True):
+    """One episode of Algorithm 1.  Returns (ts, stats)."""
+    env_cfg = cfg.env
+    d3 = cfg.d3pg_cfg()
+    dq = cfg.ddqn_cfg()
+    sched = make_actor_schedule(d3)
+    models: ModelParams = ts["models"]
+    k_env, key = jax.random.split(key)
+    env = env_reset(k_env, env_cfg)
+
+    def slot_step(carry, k_slot):
+        ts, env = carry
+        ks = jax.random.split(k_slot, 4)
+        s = observe(env, env_cfg, models)
+        if cfg.allocator in ("d3pg", "ddpg"):
+            raw = actor_act(ts["d3pg"]["actor"], d3, sched, s, ks[0])
+            raw = jnp.clip(raw + sigma * jax.random.normal(ks[1], raw.shape),
+                           0.0, 1.0)
+            b, xi = amend_actions(raw, env.req, env.rho, env_cfg.U)
+        elif cfg.allocator == "schrs":
+            b, xi = ga_allocate(ks[0], env, env_cfg, models, cfg.ga)
+        else:  # rcars
+            b, xi = rcars_allocate(env, env_cfg)
+        env1, r, m = env_step_slot(env, env_cfg, models, b, xi)
+        new_ts = ts
+        if cfg.allocator in ("d3pg", "ddpg"):
+            s1 = observe(env1, env_cfg, models)
+            item = {"s": s, "a": jnp.concatenate([b, xi]), "r": r, "s1": s1,
+                    "req": env.req, "rho": env.rho, "req1": env1.req,
+                    "rho1": env1.rho}
+            ebuf = buffer_add(ts["ebuf"], item)
+            new_ts = {**ts, "ebuf": ebuf}
+            if train:
+                def do_update(ts_in):
+                    batch = buffer_sample(ts_in["ebuf"], ks[2], d3.batch)
+                    d3pg_new, _ = d3pg_update(ts_in["d3pg"], d3, sched,
+                                              batch, ks[3])
+                    return {**ts_in, "d3pg": d3pg_new}
+                new_ts = jax.lax.cond(ebuf["size"] > cfg.warmup, do_update,
+                                      lambda t: t, new_ts)
+        stats = {"r": r, "hit": jnp.mean(m["cached"]),
+                 "G": jnp.mean(m["G"]),
+                 "delay": jnp.mean(m["d_tl"]),
+                 "quality": jnp.mean(m["quality"]),
+                 "viol": jnp.mean((m["d_tl"] > env_cfg.tau).astype(jnp.float32))}
+        return (new_ts, env1), stats
+
+    def frame_step(carry, k_frame):
+        ts, env = carry
+        kf = jax.random.split(k_frame, 3)
+        env = env_advance_frame(env, env_cfg)
+        gamma_t = env.gamma_idx
+        if cfg.cacher == "ddqn":
+            a_int = ddqn_act(ts["ddqn"], dq, gamma_t, kf[0], eps)
+            rho = amend_caching(a_int, dq, models.c, env_cfg.C)
+        elif cfg.cacher == "static":
+            a_int = jnp.int32(0)
+            rho = static_popular_cache(models, env_cfg)
+        else:  # random
+            a_int = jnp.int32(0)
+            rho = random_cache(kf[0], models, env_cfg)
+        env = env_set_cache(env, rho)
+        (ts, env), slot_stats = jax.lax.scan(
+            slot_step, (ts, env), jax.random.split(kf[1], env_cfg.K))
+        # frame reward (32): average slot reward minus storage penalty
+        # (erratum-corrected sign — see DESIGN.md §8)
+        storage_viol = (jnp.sum(rho * models.c) > env_cfg.C).astype(jnp.float32)
+        r_frame = jnp.mean(slot_stats["r"]) - storage_viol * env_cfg.Xi
+        out = {"gamma": gamma_t, "a_int": a_int, "r_frame": r_frame,
+               "slot": slot_stats, "storage_viol": storage_viol}
+        return (ts, env), out
+
+    (ts, env), frames = jax.lax.scan(
+        frame_step, (ts, env), jax.random.split(key, env_cfg.T))
+
+    # DDQN frame transitions: (gamma_t, a_t, r_t, gamma_{t+1}) for t < T-1
+    if cfg.cacher == "ddqn" and train:
+        def add_and_update(ts, t):
+            item = {"s": frames["gamma"][t], "a": frames["a_int"][t],
+                    "r": frames["r_frame"][t], "s1": frames["gamma"][t + 1]}
+            fbuf = buffer_add(ts["fbuf"], item)
+            ts = {**ts, "fbuf": fbuf}
+            def do_update(ts_in):
+                kb = jax.random.fold_in(key, t)
+                batch = buffer_sample(ts_in["fbuf"], kb, dq.batch)
+                ddqn_new, _ = ddqn_update(ts_in["ddqn"], dq, batch)
+                return {**ts_in, "ddqn": ddqn_new}
+            ts = jax.lax.cond(fbuf["size"] > dq.batch, do_update,
+                              lambda t_: t_, ts)
+            return ts, None
+        ts, _ = jax.lax.scan(add_and_update, ts,
+                             jnp.arange(env_cfg.T - 1))
+
+    slot = frames["slot"]
+    stats = {
+        "episode_reward": jnp.sum(slot["r"]),
+        "mean_reward": jnp.mean(slot["r"]),
+        "hit_ratio": jnp.mean(slot["hit"]),
+        "utility": jnp.mean(slot["G"]),
+        "delay": jnp.mean(slot["delay"]),
+        "quality": jnp.mean(slot["quality"]),
+        "deadline_viol": jnp.mean(slot["viol"]),
+        "storage_viol": jnp.mean(frames["storage_viol"]),
+    }
+    return ts, stats
+
+
+def train_t2drl(cfg: T2DRLCfg, *, episodes: Optional[int] = None,
+                log_every: int = 0, callback=None):
+    """Full training run.  Returns (train_state, history dict of arrays)."""
+    episodes = episodes or cfg.episodes
+    key = jax.random.PRNGKey(cfg.seed)
+    k_init, key = jax.random.split(key)
+    ts = t2drl_init(k_init, cfg)
+    hist = []
+    d3 = cfg.d3pg_cfg()
+    for ep in range(episodes):
+        k_ep = jax.random.fold_in(key, ep)
+        eps = episode_epsilon(cfg, jnp.float32(ep))
+        # exploration noise decays on the same schedule as epsilon
+        frac = min(ep / max(cfg.eps_decay_episodes, 1), 1.0)
+        sigma = jnp.float32(
+            (d3.explore_sigma * (1.0 - frac) + 0.02 * frac)
+            if cfg.allocator in ("d3pg", "ddpg") else 0.0)
+        ts, stats = run_episode(ts, cfg, k_ep, eps, sigma, train=True)
+        hist.append(stats)
+        if log_every and (ep + 1) % log_every == 0:
+            print(f"ep {ep + 1:4d} reward {float(stats['episode_reward']):9.2f} "
+                  f"hit {float(stats['hit_ratio']):.3f} "
+                  f"G {float(stats['utility']):7.2f}")
+        if callback is not None:
+            callback(ep, stats)
+    history = {k: jnp.stack([h[k] for h in hist]) for k in hist[0]}
+    return ts, history
+
+
+def eval_t2drl(ts, cfg: T2DRLCfg, *, episodes: int = 10, seed: int = 10_000):
+    """Greedy evaluation (no exploration, no updates)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for ep in range(episodes):
+        k_ep = jax.random.fold_in(key, ep)
+        _, stats = run_episode(ts, cfg, k_ep, jnp.float32(0.0),
+                               jnp.float32(0.0), train=False)
+        out.append(stats)
+    return {k: jnp.mean(jnp.stack([o[k] for o in out])) for k in out[0]}

@@ -1,0 +1,2 @@
+from .synthetic import (lm_batch_stream, make_lm_batch,  # noqa: F401
+                        request_stream)

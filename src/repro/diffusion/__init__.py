@@ -1,0 +1,3 @@
+from .schedule import DiffusionSchedule, make_schedule  # noqa: F401
+from .denoiser import denoiser_init, denoiser_apply, time_embedding  # noqa: F401
+from .sampler import reverse_sample, reverse_sample_actions  # noqa: F401

@@ -1,0 +1,48 @@
+"""Conditional noise-prediction MLP used as the D3PG actor core.
+
+Matches the paper's setup: 3 fully-connected hidden layers of 128 neurons
+learning the noise  eps_hat(x_l, l, s)  — the denoising-step index l enters
+through a sinusoidal time embedding, the environment state s through plain
+concatenation (the "text prompt" of the resource-allocation diffusion)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def time_embedding(l, dim: int = 16):
+    """Sinusoidal embedding of the (integer) denoising step.  l: scalar or
+    (B,) -> (..., dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(1000.0) * jnp.arange(half) / half)
+    ang = jnp.asarray(l, jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+TIME_DIM = 16
+
+
+def denoiser_init(key, state_dim: int, action_dim: int, *,
+                  hidden: int = 128, n_layers: int = 3,
+                  time_dim: int = TIME_DIM):
+    dims = [action_dim + state_dim + time_dim] + [hidden] * n_layers + [action_dim]
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for k, (i, o) in zip(keys, zip(dims[:-1], dims[1:])):
+        w = jax.random.normal(k, (i, o)) * (1.0 / math.sqrt(i))
+        layers.append({"w": w.astype(jnp.float32), "b": jnp.zeros(o)})
+    return {"layers": layers}
+
+
+def denoiser_apply(p, x, l, state, *, time_dim: int = TIME_DIM):
+    """eps_hat = f(x_l, l, s).  x: (..., A); l scalar/(...); state: (..., S)."""
+    te = time_embedding(l, time_dim)
+    te = jnp.broadcast_to(te, x.shape[:-1] + te.shape[-1:])
+    h = jnp.concatenate([x, state, te], axis=-1)
+    layers = p["layers"]
+    for layer in layers[:-1]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    out = h @ layers[-1]["w"] + layers[-1]["b"]
+    return out

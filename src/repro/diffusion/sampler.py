@@ -1,0 +1,57 @@
+"""Reverse-process sampling (Eq. 17-20): the D3PG action generator.
+
+Starting from x_L ~ N(0, I), iterate
+
+    mu_l  = 1/sqrt(a_l) [ x_l - (1-a_l)/sqrt(1-abar_l) eps_hat(x_l, l, s) ]
+    x_{l-1} = mu_l + sqrt(beta_tilde_l) eps,   eps ~ N(0,I)   (l > 1)
+
+Gradients flow through the entire chain (reparameterised), which is what the
+deterministic policy gradient in D3PG differentiates.  The final x_0 is
+squashed by tanh into [-1, 1] and affinely mapped to [0, 1] — the paper's raw
+action range before the action amender.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .denoiser import denoiser_apply
+from .schedule import DiffusionSchedule
+
+
+def reverse_sample(p, sched: DiffusionSchedule, state, key, action_dim: int,
+                   *, impl: str = "xla"):
+    """One reverse chain.  state: (..., S) -> x0: (..., A) in [-1, 1]."""
+    L = sched.L
+    batch_shape = state.shape[:-1]
+    kx, ke = jax.random.split(key)
+    x_L = jax.random.normal(kx, batch_shape + (action_dim,))
+    noises = jax.random.normal(ke, (L,) + batch_shape + (action_dim,))
+
+    def step(x, inp):
+        l_rev, eps_noise = inp          # l_rev runs L-1 .. 0 (0-based index)
+        eps_hat = denoiser_apply(p, x, (l_rev + 1).astype(jnp.float32), state)
+        alpha = sched.alphas[l_rev]
+        abar = sched.alpha_bars[l_rev]
+        btilde = sched.beta_tildes[l_rev]
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            x = kops.ddpm_step(x, eps_hat, eps_noise, alpha, abar, btilde,
+                               l_rev)
+        else:
+            mu = (x - (1 - alpha) / jnp.sqrt(1 - abar) * eps_hat) \
+                / jnp.sqrt(alpha)
+            # no noise at the last step (l_rev == 0)
+            x = mu + jnp.where(l_rev > 0, jnp.sqrt(btilde), 0.0) * eps_noise
+        return x, None
+
+    ls = jnp.arange(L - 1, -1, -1)
+    x0, _ = jax.lax.scan(step, x_L, (ls, noises))
+    return jnp.tanh(x0)
+
+
+def reverse_sample_actions(p, sched: DiffusionSchedule, state, key,
+                           action_dim: int, *, impl: str = "xla"):
+    """Action in [0, 1]^A (the paper's raw action range)."""
+    x0 = reverse_sample(p, sched, state, key, action_dim, impl=impl)
+    return 0.5 * (x0 + 1.0)

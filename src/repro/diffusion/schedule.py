@@ -1,0 +1,47 @@
+"""DDPM noise schedules.
+
+The paper (Sec. 5.2.1) uses the exponential VP schedule
+
+    beta_l = 1 - exp( -beta_min/L - (2l-1)/(2 L^2) (beta_max - beta_min) )
+
+for l = 1..L.  We precompute alpha, alpha-bar and the posterior variance
+beta-tilde used by the reverse process (Eq. 17).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionSchedule:
+    betas: jnp.ndarray        # (L,)
+    alphas: jnp.ndarray       # (L,)
+    alpha_bars: jnp.ndarray   # (L,)  cumulative products
+    beta_tildes: jnp.ndarray  # (L,)  posterior variances
+
+    @property
+    def L(self) -> int:
+        return self.betas.shape[0]
+
+
+def make_schedule(L: int, *, beta_min: float = 0.1, beta_max: float = 10.0,
+                  kind: str = "paper") -> DiffusionSchedule:
+    l = jnp.arange(1, L + 1, dtype=jnp.float32)
+    if kind == "paper":           # the paper's exponential VP schedule
+        betas = 1.0 - jnp.exp(-beta_min / L
+                              - (2 * l - 1) / (2 * L**2) * (beta_max - beta_min))
+    elif kind == "linear":        # Ho et al. DDPM default (image side)
+        betas = jnp.linspace(1e-4, 0.02, L)
+    elif kind == "cosine":
+        s = 0.008
+        f = jnp.cos((jnp.arange(L + 1) / L + s) / (1 + s) * jnp.pi / 2) ** 2
+        betas = jnp.clip(1.0 - f[1:] / f[:-1], 0.0, 0.999)
+    else:
+        raise ValueError(kind)
+    alphas = 1.0 - betas
+    alpha_bars = jnp.cumprod(alphas)
+    prev = jnp.concatenate([jnp.ones(1), alpha_bars[:-1]])
+    beta_tildes = (1.0 - prev) / (1.0 - alpha_bars) * betas
+    return DiffusionSchedule(betas, alphas, alpha_bars, beta_tildes)

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the compute hot-spots (validated interpret=True on
+CPU): flash_attention (prefill/train attention), ssd_scan (Mamba2 chunked
+SSD), ddpm_step (fused D3PG reverse-diffusion update).  ``ops`` holds the
+jit'd public wrappers; ``ref`` the pure-jnp oracles."""
+from . import ops, ref  # noqa: F401

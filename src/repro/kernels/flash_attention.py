@@ -1,0 +1,110 @@
+"""Flash attention (causal GQA + optional sliding window) as a Pallas TPU
+kernel.
+
+TPU adaptation: online-softmax with the K/V sweep folded into the LAST grid
+dimension — TPU grids execute sequentially over the trailing axis, so the
+running (m, l, acc) state lives in VMEM scratch and persists across the
+K-block iterations of one (batch, head, q-block) program.  Q/K blocks are
+128-aligned for the MXU; softmax statistics are kept in f32 VREGs.
+
+GQA is handled in the BlockSpec index maps (kv head = h // group) — no
+materialised head repetition in HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  bq: int, bk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)        # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)        # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)        # (bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                        # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    # fully-masked rows (m_new == NEG_INF) must contribute nothing
+    p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+    corr = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+    l_new = corr * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = corr * acc_scr[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhld(q, k, v, *, causal: bool = True,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None, bq: int = 128,
+                         bk: int = 128, interpret: bool = False):
+    """q: (B, H, L, D); k/v: (B, Hkv, S, D).  Returns (B, H, L, D)."""
+    B, H, L, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale or 1.0 / math.sqrt(D)
+    bq = min(bq, L)
+    bk = min(bk, S)
+    assert L % bq == 0 and S % bk == 0, (L, bq, S, bk)
+    nq, nk = L // bq, S // bk
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, L, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, D), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None, scale=None):
+    """q: (B, L, H, D); k/v: (B, S, Hkv, D) with H % Hkv == 0.
+    Returns (B, L, H, D) in q.dtype; softmax in f32."""
+    B, L, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale or 1.0 / math.sqrt(D)
+    qg = q.reshape(B, L, Hkv, G, D)
+    s = jnp.einsum("blkgd,bskd->bkgls", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(L)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    m = jnp.ones((L, S), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgls,bskd->blkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, L, H, D).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, D, *, chunk: int = 128):
+    """Chunked-SSD oracle — delegates to the nn-layer reference (itself
+    validated against a step-by-step recurrence in tests)."""
+    from repro.nn.ssm import ssd_reference
+    return ssd_reference(x, dt, A, Bm, Cm, D, chunk=chunk, return_state=True)
+
+
+def ddpm_step_ref(x, eps_hat, noise, alpha, alpha_bar, beta_tilde, l_rev):
+    """One fused reverse-diffusion update (Eqs. 19-20):
+    mu = (x - (1-alpha)/sqrt(1-abar) * eps_hat)/sqrt(alpha);
+    x' = mu + sqrt(beta_tilde)*noise  (noise suppressed at l_rev == 0)."""
+    xf = x.astype(jnp.float32)
+    mu = (xf - (1.0 - alpha) / jnp.sqrt(1.0 - alpha_bar)
+          * eps_hat.astype(jnp.float32)) / jnp.sqrt(alpha)
+    sigma = jnp.where(l_rev > 0, jnp.sqrt(beta_tilde), 0.0)
+    return (mu + sigma * noise.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT ``jit(step).lower(**ShapeDtypeStructs).compile()``
+for every (architecture × input shape × mesh) — proves the distribution
+config is coherent without hardware.  The XLA_FLAGS line above MUST run
+before any jax import (device count locks at first init), and only here —
+smoke tests and benches see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod|--both]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ARCH_IDS, SHAPES, canonical_id, get_arch,
+                           input_specs, make_cfg, supports)
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step, params_and_specs
+from repro.nn import sharding as shlib
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def run_one(arch_name: str, shape: str, *, multi_pod: bool,
+            out_dir: str = "experiments/dryrun", lr: float = 3e-4,
+            save: bool = True, unroll: bool = True,
+            opts=None) -> dict:
+    from repro.launch.steps import PerfOpts
+    opts = opts or PerfOpts()
+    arch = get_arch(arch_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch.name, "shape": shape, "mesh": mesh_name,
+           "family": arch.family, "cite": arch.cite,
+           "opts": opts.tag}
+    ok, why = supports(arch, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cfg = make_cfg(arch, shape, unroll=unroll)
+    with shlib.use_mesh(mesh), mesh:
+        bundle = build_step(arch, shape, mesh, lr=lr, unroll=unroll,
+                            opts=opts)
+        jf = jax.jit(bundle.step_fn, in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings,
+                     donate_argnums=bundle.donate_argnums)
+        lowered = jf.lower(*bundle.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    try:
+        mem = _mem_dict(compiled.memory_analysis())
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+    text = compiled.as_text()
+    coll = rl.collective_bytes(text)
+
+    # MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference)
+    sc = SHAPES[shape]
+    n_params = rl.count_params(bundle.args[0])
+    frac = rl.active_fraction(cfg)
+    tokens = sc.global_batch * (sc.seq_len if sc.step != "decode" else 1)
+    mf = rl.model_flops(n_params * frac, tokens,
+                        "train" if sc.step == "train" else "infer")
+    roof = rl.roofline(cost, coll, chips=chips, model_flops_total=mf)
+
+    rec.update({
+        "status": "ok", "step": sc.step, "chips": chips, "unroll": unroll,
+        "seq_len": sc.seq_len, "global_batch": sc.global_batch,
+        "n_params": int(n_params), "active_frac": frac,
+        "tokens_per_step": tokens,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "collectives": {k: v for k, v in coll.items() if k != "counts"},
+        "collective_counts": coll.get("counts", {}),
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "roofline": roof.as_dict(),
+    })
+    if save:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "" if opts.tag == "base" else f"_{opts.tag}"
+        fn = f"{canonical_id(arch_name)}_{shape}_{mesh_name}{suffix}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def _summary_line(rec: dict) -> str:
+    if rec["status"] != "ok":
+        return (f"{rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:10s} "
+                f"SKIP ({rec['reason'][:40]}...)")
+    r = rec["roofline"]
+    mem_gb = rec["memory"].get("temp_size_in_bytes", 0) / 2**30
+    arg_gb = rec["memory"].get("argument_size_in_bytes", 0) / 2**30
+    return (f"{rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:10s} "
+            f"comp {r['compute_s']:9.4f}s mem {r['memory_s']:9.4f}s "
+            f"coll {r['collective_s']:9.4f}s -> {r['bottleneck']:10s} "
+            f"| arg {arg_gb:7.2f}GiB tmp {mem_gb:7.2f}GiB "
+            f"| lower {rec['lower_s']:.0f}s compile {rec['compile_s']:.0f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run single-pod AND multi-pod meshes")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--scan", dest="unroll", action="store_false",
+                    help="keep lax.scan layer stacks (faster compile, but "
+                         "XLA cost_analysis undercounts while-loop flops)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="ZeRO-3: shard params+moments over data/pod axes")
+    ap.add_argument("--bf16-moments", action="store_true")
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "chunked", "flash"])
+    ap.add_argument("--ring", action="store_true",
+                    help="ring-buffer sliding-window decode caches")
+    ap.add_argument("--moe-shardmap", action="store_true",
+                    help="expert-parallel MoE dispatch via shard_map")
+    args = ap.parse_args()
+    from repro.launch.steps import PerfOpts
+    opts = PerfOpts(fsdp=args.fsdp, bf16_moments=args.bf16_moments,
+                    impl=args.impl, ring=args.ring,
+                    moe_shardmap=args.moe_shardmap)
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both else [args.multi_pod]
+
+    failures = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                try:
+                    rec = run_one(a, s, multi_pod=mp, out_dir=args.out,
+                                  unroll=args.unroll, opts=opts)
+                    print(_summary_line(rec), flush=True)
+                except Exception as e:
+                    failures.append((a, s, mp, repr(e)))
+                    print(f"{a:18s} {s:12s} {'mp' if mp else 'sp':10s} "
+                          f"FAIL {e!r}", flush=True)
+                    if not args.continue_on_error:
+                        traceback.print_exc()
+                        raise
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nAll dry-runs lowered + compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init, and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1×1 mesh over the local device — smoke tests / CPU examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_sharding(mesh: Mesh, *rest) -> NamedSharding:
+    ba = batch_axes(mesh)
+    lead = ba if len(ba) != 1 else ba[0]
+    return NamedSharding(mesh, P(lead, *rest))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,182 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh), TPU v5e-class constants:
+
+  compute    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+  memory     = HLO_bytes / (chips × 819 GB/s HBM)
+  collective = collective_bytes / (chips × 50 GB/s ICI link)
+
+``cost_analysis()`` on the compiled (SPMD-partitioned) module reports
+*per-device* flops/bytes, so terms are computed per chip directly —
+equivalent to the total/(chips×peak) formulation.  Collective bytes are not
+in cost_analysis: we parse the partitioned HLO text and sum the output-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, scaled by the standard per-algorithm wire factors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# approximate wire-bytes factor per algorithm (ring), relative to the
+# parsed output-shape bytes
+_WIRE_FACTOR = {
+    "all-gather": 1.0,        # each device receives (n-1)/n of the output
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective in (partitioned) HLO text,
+    keyed by op kind; 'total' applies the wire factors."""
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    count: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        kind = None
+        for op in COLLECTIVE_OPS:
+            # match the op as the instruction (e.g. " all-gather(", incl.
+            # variants like all-gather-start)
+            if re.search(rf"\b{op}(-start)?\(", rhs):
+                kind = op
+                break
+        if kind is None:
+            continue
+        # output shape(s): first shape token(s) on the rhs before the op name
+        head = rhs.split(kind)[0]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        out[kind] += nbytes
+        count[kind] += 1
+    out["total"] = sum(out[k] * _WIRE_FACTOR[k] for k in COLLECTIVE_OPS)
+    out["counts"] = count  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(cost: dict, coll: Dict[str, float], *, chips: int,
+             model_flops_total: Optional[float] = None) -> Roofline:
+    """cost: compiled.cost_analysis() of the PARTITIONED module (per-chip)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll.get("total", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = cb / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_total / chips if model_flops_total else None
+    return Roofline(
+        flops_per_chip=flops, bytes_per_chip=byts, coll_bytes_per_chip=cb,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=mf,
+        useful_ratio=(mf / flops if (mf and flops) else None))
+
+
+def model_flops(n_params_active: float, tokens: float,
+                kind: str = "train") -> float:
+    """MODEL_FLOPS = 6·N·D for training; 2·N·D for inference forward."""
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n_params_active * tokens
+
+
+def count_params(tree) -> int:
+    import jax
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def active_fraction(cfg) -> float:
+    """Active/total parameter fraction for MoE CompositeLM configs (1.0 for
+    dense).  Routed expert params count as top_k/n_experts active."""
+    try:
+        groups = cfg.groups
+    except AttributeError:
+        return 1.0
+    total = 0.0
+    active = 0.0
+    for g in groups:
+        for b in g.cycle:
+            d = b.d_model
+            if b.mixer == "attn" and b.attn:
+                a = b.attn
+                w = d * (a.n_heads + 2 * a.n_kv_heads) * a.d_head \
+                    + a.n_heads * a.d_head * d
+            elif b.mixer == "mla" and b.mla:
+                m = b.mla
+                qd = m.qk_nope_dim + m.qk_rope_dim
+                if m.q_lora_rank:
+                    w = d * m.q_lora_rank + m.q_lora_rank * m.n_heads * qd
+                else:
+                    w = d * m.n_heads * qd
+                w += d * (m.kv_lora_rank + m.qk_rope_dim)
+                w += m.kv_lora_rank * m.n_heads * (m.qk_nope_dim
+                                                   + m.v_head_dim)
+                w += m.n_heads * m.v_head_dim * d
+            elif b.mixer == "ssm" and b.ssm:
+                s = b.ssm
+                w = d * (2 * s.d_inner + 2 * s.n_groups * s.d_state
+                         + s.n_heads) + s.d_inner * d
+            else:
+                w = 0.0
+            n_rep = g.repeats if not b.shared else 1
+            total += w * n_rep
+            active += w * n_rep
+            if b.ffn == "mlp" and b.mlp:
+                f = 3 * d * b.mlp.d_ff if b.mlp.gated else 2 * d * b.mlp.d_ff
+                total += f * n_rep
+                active += f * n_rep
+            elif b.ffn == "moe" and b.moe:
+                mo = b.moe
+                routed = 3 * d * mo.d_ff * mo.n_experts
+                shared = 3 * d * mo.d_ff * mo.n_shared
+                total += (routed + shared) * n_rep
+                active += (routed * mo.top_k / mo.n_experts + shared) * n_rep
+    if total == 0:
+        return 1.0
+    return active / total

@@ -1,0 +1,343 @@
+"""Step builders: (train / prefill / decode) × (lm / whisper) as pure jit
+targets, plus the sharding trees for params, optimizer state and inputs.
+
+Used by the multi-pod dry-run (AOT ``.lower().compile()`` with
+ShapeDtypeStruct inputs) and by the real CPU-scale training/serving drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, Arch, input_specs, make_cfg
+from repro.models import lm as lm_mod
+from repro.models import whisper as wh_mod
+from repro.nn import sharding as shlib
+from repro.optim import adam_init, adam_update
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec_for(mesh: Mesh, *rest) -> P:
+    ba = _batch_axes(mesh)
+    lead = ba if len(ba) != 1 else ba[0]
+    return P(lead if ba else None, *rest)
+
+
+def spec_to_sharding(mesh: Mesh, spec_tree, sds_tree=None):
+    """PartitionSpec tree -> NamedSharding tree.  With ``sds_tree`` (matching
+    ShapeDtypeStructs) each spec is shape-fitted first: mesh axes that do not
+    divide their dim are dropped (JAX requires even sharding)."""
+    if sds_tree is None:
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda s: isinstance(s, P))
+    return jax.tree.map(
+        lambda s, x: NamedSharding(mesh, shlib.fit_spec(s, x.shape, mesh)),
+        spec_tree, sds_tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def opt_spec(param_spec_tree):
+    """Adam state mirrors the param specs; step counter replicated."""
+    return {"mu": param_spec_tree, "nu": param_spec_tree, "step": P()}
+
+
+def _needs_seq_shard(cfg, mesh: Mesh) -> Optional[str]:
+    """Shard decode KV caches over the sequence dim instead of kv-heads when
+    kv-heads cannot fill the model axis (e.g. GQA kv=2 on a 16-way axis)."""
+    if "model" not in mesh.axis_names:
+        return None
+    msize = mesh.shape["model"]
+    try:
+        groups = cfg.groups
+    except AttributeError:
+        return None
+    for g in groups:
+        for b in g.cycle:
+            if b.mixer == "attn" and b.attn.n_kv_heads % msize != 0:
+                return "model"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the dry-run needs for one (arch, shape)."""
+    step_fn: Callable
+    args: Tuple            # ShapeDtypeStruct pytrees, positionally
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfOpts:
+    """Beyond-paper performance options iterated in EXPERIMENTS.md §Perf.
+
+    fsdp         — additionally shard params + Adam moments over the 'data'
+                   (and 'pod') axes, ZeRO-3 style: grad all-reduces become
+                   reduce-scatter + all-gather of 1/|data| shards and the
+                   per-chip state bytes drop |data|-fold.
+    bf16_moments — keep Adam mu/nu in bf16 (halves optimizer bytes).
+    impl         — attention implementation for train/prefill:
+                   'xla' (materialised scores), 'chunked' (lax.scan
+                   online-softmax, O(bq·bk) working set), 'flash' (the
+                   Pallas kernel).
+    ring         — sliding-window decode caches become ring buffers of
+                   `window` slots instead of full-sequence buffers.
+    """
+    fsdp: bool = False
+    bf16_moments: bool = False
+    impl: str = "xla"
+    ring: bool = False
+    moe_shardmap: bool = False   # expert-parallel dispatch via shard_map:
+    # local per-data-shard dispatch + model-axis psum combine, replacing the
+    # GSPMD global-scatter path whose (E·cap, D) buffers lower to full-size
+    # all-reduces (§Perf iteration A2)
+
+    @property
+    def tag(self) -> str:
+        parts = []
+        if self.fsdp:
+            parts.append("fsdp")
+        if self.bf16_moments:
+            parts.append("bf16m")
+        if self.impl != "xla":
+            parts.append(self.impl)
+        if self.ring:
+            parts.append("ring")
+        if self.moe_shardmap:
+            parts.append("moesm")
+        return "-".join(parts) or "base"
+
+
+def _fsdp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Add the data(+pod) axes to the largest still-unsharded dim of a param
+    (ZeRO-3).  Shape-fitting happens downstream in spec_to_sharding."""
+    axes = _fsdp_axes(mesh)
+    if not axes:
+        return spec
+    dprod = 1
+    for a in axes:
+        dprod *= mesh.shape[a]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a:
+                used.add(a)
+    if used & set(axes):
+        return spec
+    best, best_size = None, 0
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % dprod == 0 and s > best_size:
+            best, best_size = i, s
+    if best is None:
+        return spec
+    entries[best] = axes if len(axes) > 1 else axes[0]
+    return P(*entries)
+
+
+def apply_fsdp(spec_tree, sds_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, x: fsdp_spec(s, x.shape, mesh), spec_tree, sds_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def _apply_ring(cfg):
+    """Flip ring=True on every windowed attention block of a CompositeLM."""
+    new_groups = []
+    for g in cfg.groups:
+        cycle = []
+        for b in g.cycle:
+            if b.mixer == "attn" and b.attn and b.attn.window:
+                b = dataclasses.replace(
+                    b, attn=dataclasses.replace(b.attn, ring=True))
+            cycle.append(b)
+        new_groups.append(dataclasses.replace(g, cycle=tuple(cycle)))
+    return dataclasses.replace(cfg, groups=tuple(new_groups))
+
+
+def _apply_moe_shardmap(cfg):
+    """Switch every MoE block to the shard_map expert-parallel dispatch."""
+    new_groups = []
+    for g in cfg.groups:
+        cycle = []
+        for b in g.cycle:
+            if b.ffn == "moe" and b.moe:
+                b = dataclasses.replace(
+                    b, moe=dataclasses.replace(b.moe, dispatch="shardmap"))
+            cycle.append(b)
+        new_groups.append(dataclasses.replace(g, cycle=tuple(cycle)))
+    return dataclasses.replace(cfg, groups=tuple(new_groups))
+
+
+def _loss_fn(arch: Arch, cfg, impl: str = "xla"):
+    if arch.kind == "whisper":
+        return functools.partial(wh_mod.whisper_loss, cfg=cfg)
+    return functools.partial(lm_mod.lm_loss, cfg=cfg, impl=impl)
+
+
+def params_and_specs(arch: Arch, cfg):
+    if arch.kind == "whisper":
+        p_sds = jax.eval_shape(
+            lambda: wh_mod.whisper_init(jax.random.PRNGKey(0), cfg))
+        spec = wh_mod.whisper_spec(cfg)
+    else:
+        p_sds = jax.eval_shape(
+            lambda: lm_mod.lm_init(jax.random.PRNGKey(0), cfg))
+        spec = lm_mod.lm_spec(cfg)
+    return p_sds, spec
+
+
+def build_step(arch: Arch, shape_name: str, mesh: Mesh, *,
+               lr: float = 3e-4, impl: str = "xla", unroll: bool = False,
+               opts: Optional[PerfOpts] = None) -> StepBundle:
+    opts = opts or PerfOpts(impl=impl)
+    impl = opts.impl
+    sc = SHAPES[shape_name]
+    cfg = make_cfg(arch, shape_name, unroll=unroll)
+    if opts.ring and arch.kind != "whisper":
+        cfg = _apply_ring(cfg)
+    if opts.moe_shardmap and arch.kind != "whisper":
+        cfg = _apply_moe_shardmap(cfg)
+    step_kind, inputs = input_specs(arch, shape_name)
+    if "cache" in inputs and arch.kind != "whisper":
+        # rebuild the cache stand-ins from the (possibly ring-transformed)
+        # config
+        from repro.models.lm import lm_init_cache
+        inputs = dict(inputs)
+        inputs["cache"] = jax.eval_shape(
+            lambda: lm_init_cache(cfg, sc.global_batch, sc.seq_len,
+                                  dtype=jnp.bfloat16))
+    p_sds, p_spec = params_and_specs(arch, cfg)
+    if opts.fsdp:
+        p_spec = apply_fsdp(p_spec, p_sds, mesh)
+    p_shard = spec_to_sharding(mesh, p_spec, p_sds)
+    repl = NamedSharding(mesh, P())
+
+    def bspec(sds, *rest):
+        """Batch-leading sharding, shape-fitted to the given SDS."""
+        return NamedSharding(
+            mesh, shlib.fit_spec(batch_spec_for(mesh, *rest), sds.shape,
+                                 mesh))
+
+    if step_kind == "train":
+        moment_dtype = jnp.bfloat16 if opts.bf16_moments else jnp.float32
+        opt_sds = jax.eval_shape(
+            lambda p: adam_init(p, moment_dtype=moment_dtype), p_sds)
+        opt_shard = spec_to_sharding(mesh, opt_spec(p_spec), opt_sds)
+        loss = _loss_fn(arch, cfg, impl=impl)
+
+        if arch.kind == "whisper":
+            def train_step(params, opt, batch):
+                (l, metrics), grads = jax.value_and_grad(
+                    lambda p: loss(p, batch=batch), has_aux=True)(params)
+                params, opt, om = adam_update(grads, opt, params, lr=lr,
+                                              max_norm=1.0)
+                return params, opt, {**metrics, **om}
+            batch_sds = {k: inputs[k] for k in
+                         ("frame_embeds", "tokens", "labels")}
+            batch_shard = {
+                "frame_embeds": bspec(inputs["frame_embeds"], None, None),
+                "tokens": bspec(inputs["tokens"], None),
+                "labels": bspec(inputs["labels"], None)}
+        else:
+            def train_step(params, opt, batch):
+                (l, metrics), grads = jax.value_and_grad(
+                    lambda p: loss(p, batch=batch), has_aux=True)(params)
+                params, opt, om = adam_update(grads, opt, params, lr=lr,
+                                              max_norm=1.0)
+                return params, opt, {**metrics, **om}
+            batch_sds = {k: v for k, v in inputs.items()}
+            batch_shard = {"tokens": bspec(inputs["tokens"], None),
+                           "labels": bspec(inputs["labels"], None)}
+            if "prefix_embeds" in batch_sds:
+                batch_shard["prefix_embeds"] = bspec(
+                    inputs["prefix_embeds"], None, None)
+        metric_shard = jax.tree.map(
+            lambda _: repl,
+            jax.eval_shape(train_step, p_sds, opt_sds, batch_sds)[2])
+        return StepBundle(
+            step_fn=train_step,
+            args=(p_sds, opt_sds, batch_sds),
+            in_shardings=(p_shard, opt_shard, batch_shard),
+            out_shardings=(p_shard, opt_shard, metric_shard),
+            donate_argnums=(0, 1))
+
+    seq_shard = (_needs_seq_shard(cfg, mesh)
+                 if step_kind == "decode" else None)
+    if arch.kind == "whisper":
+        cache_spec = wh_mod.whisper_cache_spec(cfg, seq_shard=seq_shard)
+    else:
+        cache_spec = lm_mod.lm_cache_spec(cfg, seq_shard=seq_shard)
+    with shlib.use_mesh(mesh):
+        cache_shard = spec_to_sharding(mesh, cache_spec, inputs["cache"])
+
+    def logits_shard_for(step_fn, args):
+        logits_sds = jax.eval_shape(step_fn, *args)[0]
+        return bspec(logits_sds, None, "model")
+
+    if step_kind == "prefill":
+        if arch.kind == "whisper":
+            def prefill_step(params, frame_embeds, tokens, cache):
+                return wh_mod.whisper_prefill(params, cfg, frame_embeds,
+                                              tokens, cache)
+            args = (p_sds, inputs["frame_embeds"], inputs["tokens"],
+                    inputs["cache"])
+            in_sh = (p_shard, bspec(inputs["frame_embeds"], None, None),
+                     bspec(inputs["tokens"], None), cache_shard)
+        elif "prefix_embeds" in inputs:
+            def prefill_step(params, prefix_embeds, tokens, cache):
+                return lm_mod.lm_prefill(params, cfg, tokens, cache,
+                                         prefix_embeds=prefix_embeds,
+                                         impl=impl)
+            args = (p_sds, inputs["prefix_embeds"], inputs["tokens"],
+                    inputs["cache"])
+            in_sh = (p_shard, bspec(inputs["prefix_embeds"], None, None),
+                     bspec(inputs["tokens"], None), cache_shard)
+        else:
+            def prefill_step(params, tokens, cache):
+                return lm_mod.lm_prefill(params, cfg, tokens, cache,
+                                         impl=impl)
+            args = (p_sds, inputs["tokens"], inputs["cache"])
+            in_sh = (p_shard, bspec(inputs["tokens"], None), cache_shard)
+        with shlib.use_mesh(mesh):
+            lsh = logits_shard_for(prefill_step, args)
+        return StepBundle(
+            step_fn=prefill_step, args=args, in_shardings=in_sh,
+            out_shardings=(lsh, cache_shard),
+            donate_argnums=(len(args) - 1,))
+
+    # decode
+    if arch.kind == "whisper":
+        def decode_step(params, token, cache, pos):
+            return wh_mod.whisper_decode(params, cfg, token, cache, pos)
+    else:
+        def decode_step(params, token, cache, pos):
+            return lm_mod.lm_decode(params, cfg, token, cache, pos)
+    args = (p_sds, inputs["token"], inputs["cache"], inputs["pos"])
+    in_sh = (p_shard, bspec(inputs["token"], None), cache_shard, repl)
+    with shlib.use_mesh(mesh):
+        lsh = logits_shard_for(decode_step, args)
+    return StepBundle(
+        step_fn=decode_step, args=args, in_shardings=in_sh,
+        out_shardings=(lsh, cache_shard),
+        donate_argnums=(2,))

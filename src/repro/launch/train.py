@@ -1,0 +1,127 @@
+"""Training driver — runs for real at CPU/smoke scale, and is the same code
+path the dry-run lowers for the production meshes.
+
+Usage (CPU-scale end-to-end):
+  python -m repro.launch.train --arch qwen2-0.5b --smoke --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import bf16_safe_cast as _cast, save_pytree
+from repro.configs import get_arch
+from repro.data import make_lm_batch
+from repro.models import lm as lm_mod
+from repro.models import whisper as wh_mod
+from repro.optim import adam_init, adam_update, linear_warmup_cosine
+
+
+def make_train_fns(arch, cfg, *, lr_schedule, impl: str = "xla"):
+    if arch.kind == "whisper":
+        loss_fn = lambda p, batch: wh_mod.whisper_loss(p, cfg, batch)
+        init_fn = lambda key: wh_mod.whisper_init(key, cfg)
+    else:
+        loss_fn = lambda p, batch: lm_mod.lm_loss(p, cfg, batch, impl=impl)
+        init_fn = lambda key: lm_mod.lm_init(key, cfg)
+
+    @jax.jit
+    def train_step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch), has_aux=True)(params)
+        lr = lr_schedule(opt["step"])
+        params, opt, om = adam_update(grads, opt, params, lr=lr,
+                                      max_norm=1.0)
+        return params, opt, {**metrics, **om, "lr": lr}
+
+    return init_fn, train_step
+
+
+def make_batch_fn(arch, cfg, *, batch: int, seq_len: int):
+    """Synthetic batch matched to the arch's modality."""
+    n_pre = getattr(arch, "n_prefix", 0)
+
+    def fn(key):
+        if arch.kind == "whisper":
+            kb, kf = jax.random.split(key)
+            b = make_lm_batch(kb, vocab=cfg.vocab, batch=batch,
+                              seq_len=seq_len)
+            b["frame_embeds"] = 0.02 * jax.random.normal(
+                kf, (batch, cfg.n_frames, cfg.d_model))
+            return b
+        if n_pre and arch.prefix_embed_dim:
+            kb, kp = jax.random.split(key)
+            npre = min(n_pre, seq_len // 2)
+            b = make_lm_batch(kb, vocab=cfg.vocab, batch=batch,
+                              seq_len=seq_len)
+            b["tokens"] = b["tokens"][:, : seq_len - npre]
+            b["prefix_embeds"] = 0.02 * jax.random.normal(
+                kp, (batch, npre, arch.prefix_embed_dim))
+            return b
+        return make_lm_batch(key, vocab=cfg.vocab, batch=batch,
+                             seq_len=seq_len)
+    return fn
+
+
+def train_loop(arch_name: str, *, smoke: bool = True, steps: int = 200,
+               batch: int = 8, seq_len: int = 128, lr: float = 3e-4,
+               log_every: int = 20, seed: int = 0, impl: str = "xla",
+               ckpt: str = ""):
+    arch = get_arch(arch_name)
+    cfg = arch.make_smoke() if smoke else arch.make_full()
+    # VLM smoke: the reduced config has its own (small) prefix size
+    if getattr(cfg, "prefix_embed_dim", 0):
+        arch = arch.__class__(**{**arch.__dict__,
+                                 "n_prefix": cfg.n_prefix,
+                                 "prefix_embed_dim": cfg.prefix_embed_dim})
+    sched = linear_warmup_cosine(lr, warmup=min(20, steps // 10 + 1),
+                                 steps=steps)
+    init_fn, train_step = make_train_fns(arch, cfg, lr_schedule=sched,
+                                         impl=impl)
+    batch_fn = make_batch_fn(arch, cfg, batch=batch, seq_len=seq_len)
+    key = jax.random.PRNGKey(seed)
+    params = init_fn(key)
+    opt = adam_init(params)
+    hist = []
+    t0 = time.time()
+    for step in range(steps):
+        b = batch_fn(jax.random.fold_in(key, step))
+        params, opt, m = train_step(params, opt, b)
+        hist.append(float(m["loss"]))
+        if log_every and (step + 1) % log_every == 0:
+            print(f"step {step + 1:5d} loss {hist[-1]:7.4f} "
+                  f"xent {float(m['xent']):7.4f} "
+                  f"gnorm {float(m['gnorm']):8.3f} "
+                  f"({(time.time() - t0) / (step + 1):.2f} s/step)",
+                  flush=True)
+    if ckpt:
+        save_pytree(ckpt, _cast({"params": params, "opt": opt}))
+        print(f"saved checkpoint to {ckpt}")
+    return params, hist
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--impl", default="xla", choices=["xla", "flash",
+                                                      "pallas"])
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    _, hist = train_loop(args.arch, smoke=args.smoke, steps=args.steps,
+                         batch=args.batch, seq_len=args.seq_len, lr=args.lr,
+                         impl=args.impl, ckpt=args.ckpt, seed=args.seed)
+    print(f"final loss {hist[-1]:.4f} (first {hist[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .blocks import BlockCfg  # noqa: F401
+from .lm import (GroupCfg, LMCfg, lm_cache_spec, lm_decode, lm_forward,  # noqa: F401
+                 lm_init, lm_init_cache, lm_loss, lm_prefill, lm_spec,
+                 softmax_xent)
+from .whisper import (WhisperCfg, whisper_cache_spec, whisper_decode,  # noqa: F401
+                      whisper_forward, whisper_init, whisper_init_cache,
+                      whisper_loss, whisper_prefill, whisper_spec)

@@ -1,0 +1,1 @@
+from . import attention, core, mla, mlp, moe, rotary, sharding, ssm  # noqa: F401

@@ -1,0 +1,170 @@
+"""Core building blocks: initializers, dtype policy, param/spec pytree helpers.
+
+Params are plain nested dicts of jnp arrays.  Every layer module exposes
+``<layer>_init(key, ...) -> params``, ``<layer>_spec(...) -> PartitionSpec
+pytree`` (mirroring the params tree), and an apply function.  Sharding specs
+use the logical mesh axes ``("data", "model")`` (plus ``"pod"`` on multi-pod
+meshes; batch dims are sharded over ``("pod","data")`` via the helper in
+``repro.launch.mesh``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any  # nested dict pytree of arrays
+Specs = Any   # nested dict pytree of PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    """Mixed-precision policy: params vs compute vs reductions."""
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # softmax / norms / router logits always accumulate in float32.
+
+    def cast_compute(self, x):
+        return x.astype(self.compute_dtype)
+
+
+DEFAULT_POLICY = DTypePolicy()
+BF16_POLICY = DTypePolicy(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    stddev = scale / max(1.0, math.sqrt(shape[0] if len(shape) >= 1 else 1))
+    # fan-in scaled normal (matches common transformer init)
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    stddev = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * stddev).astype(dtype)
+
+
+def normal_init(key, shape, stddev, dtype):
+    return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def zeros_init(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: float = 1.0) -> Params:
+    p = {"w": truncated_normal_init(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = zeros_init((d_out,), dtype)
+    return p
+
+
+def linear_spec(*, bias: bool = False, w_spec=P(None, None),
+                b_spec=None) -> Specs:
+    s = {"w": w_spec}
+    if bias:
+        s["b"] = b_spec if b_spec is not None else P(w_spec[1]) if len(w_spec) == 2 else P(None)
+    return s
+
+
+def linear(p: Params, x: jnp.ndarray, *, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    w = p["w"].astype(compute_dtype)
+    y = jnp.einsum("...i,io->...o", x.astype(compute_dtype), w)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": ones_init((d,), dtype)}
+
+
+def rmsnorm_spec() -> Specs:
+    return {"scale": P(None)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, *, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(d: int, *, elementwise: bool = True, dtype=jnp.float32) -> Params:
+    if not elementwise:  # OLMo non-parametric LN
+        return {}
+    return {"scale": ones_init((d,), dtype), "bias": zeros_init((d,), dtype)}
+
+
+def layernorm_spec(*, elementwise: bool = True) -> Specs:
+    if not elementwise:
+        return {}
+    return {"scale": P(None), "bias": P(None)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, *, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if "scale" in p:
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, *, dtype=jnp.float32) -> Params:
+    return {"table": normal_init(key, (vocab, d), 1.0 / math.sqrt(d), dtype)}
+
+
+def embedding_spec() -> Specs:
+    return {"table": P("model", None)}
+
+
+def embed(p: Params, ids: jnp.ndarray, *, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jnp.take(p["table"].astype(compute_dtype), ids, axis=0)
+
+
+def unembed(p: Params, x: jnp.ndarray, *, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Tied-embedding logits projection (logits in f32)."""
+    table = p["table"].astype(compute_dtype)
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype), table,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Activations / misc
+# ---------------------------------------------------------------------------
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def count_params(params: Params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+def tree_cast(params: Params, dtype) -> Params:
+    return jax.tree.map(lambda p: p.astype(dtype), params)

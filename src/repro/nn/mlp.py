@@ -1,0 +1,48 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen family) and GELU (whisper/olmo opt)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .core import gelu, linear, linear_init, silu
+from .sharding import batch_spec, constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPCfg:
+    d_model: int
+    d_ff: int
+    gated: bool = True            # SwiGLU if True, GELU otherwise
+    act: str = "silu"
+
+
+def mlp_init(key, cfg: MLPCfg, *, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": linear_init(k1, cfg.d_model, cfg.d_ff, dtype=dtype),
+        "down": linear_init(k2, cfg.d_ff, cfg.d_model, dtype=dtype),
+    }
+    if cfg.gated:
+        p["gate"] = linear_init(k3, cfg.d_model, cfg.d_ff, dtype=dtype)
+    return p
+
+
+def mlp_spec(cfg: MLPCfg):
+    s = {"up": {"w": P(None, "model")}, "down": {"w": P("model", None)}}
+    if cfg.gated:
+        s["gate"] = {"w": P(None, "model")}
+    return s
+
+
+def mlp_apply(p, cfg: MLPCfg, x, *, compute_dtype=jnp.bfloat16):
+    act = silu if cfg.act == "silu" else gelu
+    h = linear(p["up"], x, compute_dtype=compute_dtype)
+    if cfg.gated:
+        h = act(linear(p["gate"], x, compute_dtype=compute_dtype)) * h
+    else:
+        h = act(h)
+    h = constrain(h, batch_spec(None, "model"))
+    return linear(p["down"], h, compute_dtype=compute_dtype)

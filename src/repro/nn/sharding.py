@@ -1,0 +1,103 @@
+"""Mesh context + activation sharding-constraint helpers.
+
+We thread the mesh through an explicit context (not jax's implicit resource
+env) so that model code can emit ``with_sharding_constraint`` only when a mesh
+is active, and single-device tests/smoke runs stay constraint-free.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def batch_axes() -> tuple:
+    """Mesh axes over which the batch dim is sharded ('pod' first if present)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return ()
+    names = mesh.axis_names
+    axes = tuple(a for a in ("pod", "data") if a in names)
+    return axes
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide their dim (JAX requires
+    divisibility).  For tuple entries the longest dividing prefix is kept.
+    Dims beyond ``len(spec)`` are left unsharded (PartitionSpec semantics)."""
+    new = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            new.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep, prod = [], 1
+        for a in axes:
+            sz = mesh.shape[a]
+            if shape[i] % (prod * sz) == 0:
+                keep.append(a)
+                prod *= sz
+            else:
+                break
+        new.append(tuple(keep) if len(keep) > 1
+                   else (keep[0] if keep else None))
+    return P(*new)
+
+
+def constrain(x, spec: P):
+    """Apply a (shape-fitted) sharding constraint iff a mesh is active."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = fit_spec(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_spec(*rest) -> P:
+    """PartitionSpec with leading batch dim over ('pod','data')."""
+    ba = batch_axes()
+    lead = ba if len(ba) != 1 else ba[0]
+    return P(lead if ba else None, *rest)
+
+
+def shard_batch_act(x, *rest):
+    """Constrain activation whose dim0 is batch; rest are explicit axes."""
+    return constrain(x, batch_spec(*rest))
+
+
+def named_sharding(spec: P) -> Optional[NamedSharding]:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec)
+
+
+def make_param_shardings(specs) -> object:
+    """Map a PartitionSpec pytree to NamedSharding pytree (or None w/o mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,257 @@
+"""Mamba2 / SSD (state-space duality) block.
+
+TPU adaptation (see DESIGN.md §4): the original CUDA kernel uses warp-level
+scans; here the SSD is expressed as a *chunked* scan — intra-chunk terms are
+dense (Q×Q) matmuls that map onto the MXU, and the inter-chunk recurrence is a
+short ``lax.scan`` over chunk states (L/Q steps).  The hot intra-chunk path has
+a Pallas kernel (``repro.kernels.ssd_scan``); this module holds the pure-jnp
+reference path used for training and as the oracle.
+
+Layout follows the Mamba2 paper: input projection produces
+``[z (d_inner), x (d_inner), B (G·N), C (G·N), dt (H)]``; x/B/C pass through a
+short causal depthwise conv; the SSD mixes sequence information; a gated
+RMSNorm and output projection close the block.  Decode keeps a constant-size
+state: conv tail (width-1 tokens) + SSM state (H, P, N).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .core import linear, linear_init, rmsnorm
+from .sharding import batch_spec, constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_model: int
+    d_inner: int                 # = expand * d_model (H * headdim)
+    head_dim: int = 64           # P
+    n_groups: int = 1            # G (B/C groups)
+    d_state: int = 128           # N
+    conv_width: int = 4
+    chunk: int = 128             # Q — SSD chunk length
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssm_init(key, cfg: SSMCfg, *, dtype=jnp.float32):
+    kin, kout, kconv, kdt = jax.random.split(key, 4)
+    H, G, N = cfg.n_heads, cfg.n_groups, cfg.d_state
+    d_in_proj = 2 * cfg.d_inner + 2 * G * N + H
+    d_conv = cfg.d_inner + 2 * G * N   # x, B, C share the conv
+    # dt bias initialised so softplus(dt_bias) ∈ [dt_min, dt_max] (mamba2 init)
+    u = jax.random.uniform(kdt, (H,))
+    dt0 = jnp.exp(u * (math.log(cfg.dt_max) - math.log(cfg.dt_min))
+                  + math.log(cfg.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    p = {
+        "in_proj": linear_init(kin, cfg.d_model, d_in_proj, dtype=dtype),
+        "conv_w": (jax.random.normal(kconv, (cfg.conv_width, d_conv))
+                   * (1.0 / math.sqrt(cfg.conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((d_conv,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),  # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": {"scale": jnp.ones((cfg.d_inner,), dtype)},
+        "out_proj": linear_init(kout, cfg.d_inner, cfg.d_model, dtype=dtype),
+    }
+    return p
+
+
+def ssm_spec(cfg: SSMCfg):
+    return {
+        "in_proj": {"w": P(None, "model")},
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "norm": {"scale": P(None)},
+        "out_proj": {"w": P("model", None)},
+    }
+
+
+def _split_proj(cfg: SSMCfg, zxbcdt):
+    H, G, N = cfg.n_heads, cfg.n_groups, cfg.d_state
+    di = cfg.d_inner
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: di + di + 2 * G * N]
+    dt = zxbcdt[..., di + di + 2 * G * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, *, tail: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over time.  xBC: (B,L,Dc), w: (W,Dc).
+
+    ``tail``: (B, W-1, Dc) previous tokens (decode / chunked prefill)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros(xBC.shape[:1] + (W - 1,) + xBC.shape[2:], xBC.dtype)
+    xpad = jnp.concatenate([tail, xBC], axis=1)
+    # sum_w xpad[:, t+w, :] * w[w] — unrolled small W
+    out = sum(xpad[:, i: i + xBC.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b), xpad[:, -(W - 1):, :]
+
+
+def ssd_reference(x, dt, A, Bm, Cm, D, *, chunk: int,
+                  init_state: Optional[jnp.ndarray] = None,
+                  return_state: bool = False):
+    """Chunked SSD.  x:(B,L,H,P) dt:(B,L,H) A:(H) Bm/Cm:(B,L,G,N) D:(H).
+
+    Returns y:(B,L,H,P) [and final state (B,H,P,N)].  All math in f32.
+    """
+    Bsz, L, H, Pd = x.shape
+    G = Bm.shape[2]
+    N = Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    Lorig = L
+    if L % Q:
+        # pad with dt=0 steps: decay exp(0·A)=1 and zero state contribution,
+        # so padded positions are inert; outputs are sliced back below.
+        pad = Q - L % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        L = L + pad
+    nc = L // Q
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)   # (B,L,H,N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+
+    # reshape to chunks
+    xc = xf.reshape(Bsz, nc, Q, H, Pd)
+    dtc = dtf.reshape(Bsz, nc, Q, H)
+    Bc = Bf.reshape(Bsz, nc, Q, H, N)
+    Cc = Cf.reshape(Bsz, nc, Q, H, N)
+
+    a = dtc * A[None, None, None, :]          # (B,nc,Q,H) log-decay (negative)
+    a_cs = jnp.cumsum(a, axis=2)              # inclusive cumsum within chunk
+
+    # intra-chunk: y[i] += sum_{j<=i} C_i·B_j exp(a_cs[i]-a_cs[j]) dt_j x_j
+    seg = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]   # (B,nc,Q,Q,H) i,j
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc)           # (B,nc,Q,Q,H)
+    M = CB * Lmat * dtc[:, :, None, :, :]                   # weight on x_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # chunk summaries: state contribution of each chunk
+    decay_to_end = jnp.exp(a_cs[:, :, -1:, :] - a_cs)       # (B,nc,Q,H)
+    Sc = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                    decay_to_end * dtc, Bc, xc)             # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])                # (B,nc,H)
+
+    # inter-chunk recurrence over chunk states
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+
+    def step(S, inp):
+        Sc_c, dec_c = inp                                   # (B,H,P,N), (B,H)
+        S_new = S * dec_c[:, :, None, None] + Sc_c
+        return S_new, S                                     # emit state *before* chunk
+
+    S_last, S_prev = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                     # (B,nc,H,P,N)
+
+    # inter-chunk output: y[i] += C_i exp(a_cs[i]) S_prev
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp",
+                         Cc * jnp.exp(a_cs)[..., None], S_prev)
+
+    y = (y_intra + y_inter).reshape(Bsz, L, H, Pd)[:, :Lorig]
+    y = y + x.astype(jnp.float32)[:, :Lorig] * D[None, None, :, None]
+    if return_state:
+        return y, S_last
+    return y
+
+
+def ssm_forward(p, cfg: SSMCfg, xin, *, impl: str = "xla",
+                compute_dtype=jnp.bfloat16, return_state: bool = False):
+    """Full-sequence Mamba2 block.  xin: (B, L, d_model)."""
+    Bsz, L, _ = xin.shape
+    H, G, N = cfg.n_heads, cfg.n_groups, cfg.d_state
+    zxbcdt = linear(p["in_proj"], xin, compute_dtype=compute_dtype)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC, conv_tail = _causal_conv(xBC, p["conv_w"].astype(compute_dtype),
+                                  p["conv_b"].astype(compute_dtype))
+    x = xBC[..., : cfg.d_inner].reshape(Bsz, L, H, cfg.head_dim)
+    Bm = xBC[..., cfg.d_inner: cfg.d_inner + G * N].reshape(Bsz, L, G, N)
+    Cm = xBC[..., cfg.d_inner + G * N:].reshape(Bsz, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    x = constrain(x, batch_spec(None, "model", None))
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y, S = kops.ssd_scan(x, dt, A, Bm, Cm, p["D"], chunk=cfg.chunk)
+    else:
+        y, S = ssd_reference(x, dt, A, Bm, Cm, p["D"], chunk=cfg.chunk,
+                             return_state=True)
+    y = y.astype(compute_dtype).reshape(Bsz, L, cfg.d_inner)
+    y = constrain(y, batch_spec(None, "model"))
+    # gated RMSNorm (norm(y * silu(z)) in mamba2)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y, compute_dtype=compute_dtype)
+    if return_state:
+        return out, {"conv": conv_tail, "ssm": S}
+    return out
+
+
+def init_ssm_state(B: int, cfg: SSMCfg, dtype=jnp.bfloat16):
+    H, G, N = cfg.n_heads, cfg.n_groups, cfg.d_state
+    d_conv = cfg.d_inner + 2 * G * N
+    return {
+        "conv": jnp.zeros((B, cfg.conv_width - 1, d_conv), dtype),
+        "ssm": jnp.zeros((B, H, cfg.head_dim, N), jnp.float32),
+    }
+
+
+def ssm_state_spec(cfg: SSMCfg):
+    return {"conv": batch_spec(None, "model"),
+            "ssm": batch_spec("model", None, None)}
+
+
+def ssm_decode(p, cfg: SSMCfg, xin, state, *, compute_dtype=jnp.bfloat16):
+    """One-token decode.  xin: (B,1,d_model); state {"conv","ssm"}."""
+    Bsz = xin.shape[0]
+    H, G, N = cfg.n_heads, cfg.n_groups, cfg.d_state
+    zxbcdt = linear(p["in_proj"], xin, compute_dtype=compute_dtype)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC, conv_tail = _causal_conv(
+        xBC, p["conv_w"].astype(compute_dtype),
+        p["conv_b"].astype(compute_dtype),
+        tail=state["conv"].astype(compute_dtype))
+    x = xBC[:, 0, : cfg.d_inner].reshape(Bsz, H, cfg.head_dim)
+    Bm = xBC[:, 0, cfg.d_inner: cfg.d_inner + G * N].reshape(Bsz, G, N)
+    Cm = xBC[:, 0, cfg.d_inner + G * N:].reshape(Bsz, G, N)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    rep = H // G
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)   # (B,H,N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+
+    dA = jnp.exp(dt1 * A[None, :])                          # (B,H)
+    S = state["ssm"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt1, Bf, x.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", Cf, S)
+    y = y + x.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.astype(compute_dtype).reshape(Bsz, 1, cfg.d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y, compute_dtype=compute_dtype)
+    return out, {"conv": conv_tail.astype(state["conv"].dtype), "ssm": S}

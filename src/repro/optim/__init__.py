@@ -1,0 +1,3 @@
+from .adam import (adam_init, adam_update, clip_by_global_norm,  # noqa: F401
+                   global_norm)
+from .schedules import constant, cosine_decay, linear_warmup_cosine  # noqa: F401

@@ -1,0 +1,60 @@
+"""Adam/AdamW with dtype-configurable moments and global-norm clipping.
+
+Moments may be kept in bf16 (``moment_dtype``) — used for the very large MoE
+configs where fp32 Adam state does not fit the pod (DESIGN.md §6)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adam_init(params, *, moment_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.int32(0)}
+
+
+def adam_update(grads, state, params, *, lr, b1: float = 0.9,
+                b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0, max_norm: float = 0.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if max_norm:
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state["step"] + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        gf = g.astype(jnp.float32)
+        mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * gf
+        nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * gf * gf
+        delta = lr * (mu_n / b1c) / (jnp.sqrt(nu_n / b2c) + eps)
+        if weight_decay:
+            delta = delta + lr * weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - delta).astype(p.dtype),
+                mu_n.astype(mu.dtype), nu_n.astype(nu.dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(g, mu, nu, p)
+           for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {"gnorm": gnorm}

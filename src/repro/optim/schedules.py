@@ -1,0 +1,25 @@
+"""Learning-rate schedules (callable on an int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(steps - warmup, 1), final_frac)
+    def f(step):
+        w = jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+        return w * cos(jnp.maximum(step - warmup, 0))
+    return f

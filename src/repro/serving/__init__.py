@@ -1,0 +1,2 @@
+from .engine import Engine, ServeCfg  # noqa: F401
+from .gateway import CatalogEntry, EdgeGateway  # noqa: F401

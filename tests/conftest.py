@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see the real (single) device — the 512-device
+# override lives ONLY in repro.launch.dryrun.
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

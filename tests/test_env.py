@@ -1,0 +1,150 @@
+"""Environment tests (Eqs. 1-10, 23) + hypothesis property tests on the
+system's invariants (amender simplexes, quality monotonicity, reward
+bounds)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EnvCfg, amend_actions, env_reset, env_step_slot,
+                        make_models, observe, slot_metrics, tv_quality,
+                        gen_delay)
+from repro.core.env import MB_BITS, env_new_frame
+from repro.core.quality import A1, A2, A3, A4, B1, B2
+
+CFG = EnvCfg(U=6, M=5)
+KEY = jax.random.PRNGKey(0)
+MODELS = make_models(KEY, CFG)
+
+
+# -- fitted curves ------------------------------------------------------------
+
+def test_tv_quality_piecewise_endpoints():
+    assert float(tv_quality(0.0)) == A2
+    assert float(tv_quality(A1)) == A2
+    assert float(tv_quality(A3)) == A4
+    assert float(tv_quality(1000.0)) == A4
+    mid = float(tv_quality((A1 + A3) / 2))
+    assert A4 < mid < A2
+
+
+@given(st.floats(0, 1000), st.floats(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_tv_quality_monotone_nonincreasing(s1, s2):
+    lo, hi = min(s1, s2), max(s1, s2)
+    assert float(tv_quality(hi)) <= float(tv_quality(lo)) + 1e-6
+
+
+@given(st.floats(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_gen_delay_affine(steps):
+    np.testing.assert_allclose(float(gen_delay(steps)), B1 * steps + B2,
+                               rtol=1e-6)
+
+
+# -- amender invariants ---------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_amender_simplex_invariants(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    raw = jax.random.uniform(k1, (2 * CFG.U,))
+    req = jax.random.randint(k2, (CFG.U,), 0, CFG.M)
+    rho = (jax.random.uniform(k3, (CFG.M,)) > 0.5).astype(jnp.float32)
+    b, xi = amend_actions(raw, req, rho, CFG.U)
+    # (11e): bandwidth simplex
+    assert abs(float(jnp.sum(b)) - 1.0) < 1e-4
+    assert float(jnp.min(b)) >= 0.0
+    # (11f): compute simplex (sums to 1 iff any request cached, else 0)
+    gate = np.asarray(rho)[np.asarray(req)]
+    s = float(jnp.sum(xi))
+    if gate.sum() > 0:
+        assert abs(s - 1.0) < 1e-4
+    else:
+        assert s < 1e-4
+    # (11g): no compute to un-cached requests
+    assert float(jnp.max(jnp.asarray(xi) * (1 - gate))) < 1e-6
+
+
+# -- env dynamics ----------------------------------------------------------------
+
+def test_env_reset_and_step_shapes():
+    st_ = env_reset(KEY, CFG)
+    assert st_.pos.shape == (CFG.U, 2)
+    assert st_.h.shape == (CFG.U,)
+    assert int(jnp.max(st_.req)) < CFG.M
+    b = jnp.full((CFG.U,), 1.0 / CFG.U)
+    xi = jnp.full((CFG.U,), 1.0 / CFG.U)
+    nxt, r, m = env_step_slot(st_, CFG, MODELS, b, xi)
+    assert np.isfinite(float(r)) and float(r) < 0.0  # reward = -utility
+    assert m["G"].shape == (CFG.U,)
+    # positions stay in the square
+    assert float(jnp.min(nxt.pos)) >= 0.0
+    assert float(jnp.max(nxt.pos)) <= CFG.area
+
+
+def test_uncached_requests_get_cloud_quality_and_delay():
+    st_ = env_reset(KEY, CFG)
+    st_ = st_._replace(rho=jnp.zeros(CFG.M))  # nothing cached
+    b = jnp.full((CFG.U,), 1.0 / CFG.U)
+    xi = jnp.zeros((CFG.U,))
+    m = slot_metrics(st_, CFG, MODELS, b, xi)
+    req = np.asarray(st_.req)
+    np.testing.assert_allclose(np.asarray(m["quality"]),
+                               np.asarray(MODELS.a4)[req], rtol=1e-6)
+    expect_gt = np.asarray(MODELS.b1)[req] * np.asarray(MODELS.a3)[req] \
+        + np.asarray(MODELS.b2)[req]
+    np.testing.assert_allclose(np.asarray(m["delay_gt"]), expect_gt,
+                               rtol=1e-6)
+    # backhaul adds delay vs the cached path
+    st_c = st_._replace(rho=jnp.ones(CFG.M))
+    m_c = slot_metrics(st_c, CFG, MODELS, b, xi)
+    assert float(jnp.min(m["delay_up"] - m_c["delay_up"])) > 0.0
+
+
+def test_more_bandwidth_lowers_upload_delay():
+    st_ = env_reset(KEY, CFG)
+    b_small = jnp.full((CFG.U,), 0.01)
+    b_big = jnp.full((CFG.U,), 1.0 / CFG.U)
+    xi = jnp.full((CFG.U,), 1.0 / CFG.U)
+    d_small = slot_metrics(st_, CFG, MODELS, b_small, xi)["delay_up"]
+    d_big = slot_metrics(st_, CFG, MODELS, b_big, xi)["delay_up"]
+    assert float(jnp.max(d_big - d_small)) < 0.0
+
+
+def test_zipf_popularity_skews_requests():
+    cfg = EnvCfg(U=4000, M=10, gammas=(1.5, 1.5, 1.5))
+    models = make_models(KEY, cfg)
+    st_ = env_reset(KEY, cfg)
+    counts = np.bincount(np.asarray(st_.req), minlength=10)
+    assert counts[0] > counts[-1] * 2  # strong skew at gamma=1.5
+
+
+def test_frame_transition_changes_gamma_markov():
+    st_ = env_reset(KEY, CFG)
+    seen = set()
+    s = st_
+    for _ in range(20):
+        s = env_new_frame(s, CFG, jnp.ones(CFG.M))
+        seen.add(int(s.gamma_idx))
+    assert seen <= {0, 1, 2} and len(seen) >= 2
+
+
+def test_observation_dimensions_match_paper():
+    st_ = env_reset(KEY, CFG)
+    obs = observe(st_, CFG, MODELS)
+    assert obs.shape == (4 * CFG.U + CFG.M,)  # Eq. (21)
+    assert np.all(np.isfinite(np.asarray(obs)))
+
+
+def test_deadline_violation_penalised_in_reward():
+    from repro.core import slot_reward
+    st_ = env_reset(KEY, CFG)
+    b = jnp.full((CFG.U,), 1.0 / CFG.U)
+    xi = jnp.full((CFG.U,), 1.0 / CFG.U)
+    m = slot_metrics(st_, CFG, MODELS, b, xi)
+    r = float(slot_reward(m, CFG))
+    g_only = -float(jnp.mean(m["G"]))
+    viol = float(jnp.mean((m["d_tl"] > CFG.tau).astype(jnp.float32)))
+    np.testing.assert_allclose(r, g_only - viol * CFG.chi, rtol=1e-5)

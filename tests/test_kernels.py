@@ -1,0 +1,143 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, H, Hkv, L, S, D, window, dtype)
+    (2, 4, 2, 128, 128, 64, None, jnp.float32),
+    (1, 8, 8, 256, 256, 128, None, jnp.float32),
+    (1, 4, 1, 256, 256, 64, 64, jnp.float32),
+    (2, 2, 2, 96, 96, 32, None, jnp.float32),      # unaligned -> padding
+    (1, 4, 2, 128, 128, 64, None, jnp.bfloat16),
+    (1, 2, 1, 64, 64, 128, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,H,Hkv,L,S,D,window,dtype", FLASH_CASES)
+def test_flash_attention_matches_ref(B, H, Hkv, L, S, D, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, L, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              bq=64, bk=64)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_rows_sum_to_one_property():
+    """Online softmax must renormalise exactly: attention of constant V
+    returns that constant."""
+    B, H, L, D = 1, 2, 128, 64
+    q = jax.random.normal(KEY, (B, L, H, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, L, H, D))
+    v = jnp.ones((B, L, H, D))
+    out = ops.flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # (B, L, H, P, G, N, chunk)
+    (2, 64, 4, 16, 1, 16, 16),
+    (1, 128, 8, 32, 2, 64, 32),
+    (2, 40, 4, 8, 2, 16, 16),      # L not divisible by chunk -> padding
+    (1, 256, 2, 64, 1, 128, 128),
+]
+
+
+@pytest.mark.parametrize("B,L,H,P,G,N,chunk", SSD_CASES)
+def test_ssd_scan_matches_ref(B, L, H, P, G, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, L, G, N))
+    Cm = jax.random.normal(ks[4], (B, L, G, N))
+    D = jnp.ones((H,))
+    y, s = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk)
+    yr, sr = ref.ssd_scan_ref(x, dt, A, Bm, Cm, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_matches_stepwise_recurrence():
+    """The chunked SSD (any chunking) must equal the sequential SSM."""
+    B, L, H, P, G, N = 1, 24, 2, 4, 1, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, L, G, N))
+    Cm = jax.random.normal(ks[4], (B, L, G, N))
+    D = jnp.zeros((H,))
+    y, _ = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=8)
+    S = np.zeros((B, H, P, N))
+    Bf = np.repeat(np.asarray(Bm), H // G, 2)
+    Cf = np.repeat(np.asarray(Cm), H // G, 2)
+    for t in range(L):
+        dA = np.exp(np.asarray(dt)[:, t] * np.asarray(A)[None])
+        S = S * dA[:, :, None, None] + np.einsum(
+            "bh,bhn,bhp->bhpn", np.asarray(dt)[:, t], Bf[:, t],
+            np.asarray(x)[:, t])
+        yt = np.einsum("bhn,bhpn->bhp", Cf[:, t], S)
+        np.testing.assert_allclose(np.asarray(y)[:, t], yt,
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ddpm step
+# ---------------------------------------------------------------------------
+
+DDPM_CASES = [
+    ((4, 20), jnp.float32, 0), ((4, 20), jnp.float32, 3),
+    ((2, 3, 40), jnp.float32, 1), ((8, 256), jnp.bfloat16, 2),
+    ((1, 7), jnp.float32, 0),
+]
+
+
+@pytest.mark.parametrize("shape,dtype,l_rev", DDPM_CASES)
+def test_ddpm_step_matches_ref(shape, dtype, l_rev):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], shape, dtype)
+    e = jax.random.normal(ks[1], shape, dtype)
+    n = jax.random.normal(ks[2], shape, dtype)
+    alpha, abar, btilde = 0.9, 0.5, 0.04
+    out = ops.ddpm_step(x, e, n, jnp.float32(alpha), jnp.float32(abar),
+                        jnp.float32(btilde), jnp.int32(l_rev))
+    expect = ref.ddpm_step_ref(x, e, n, alpha, abar, btilde, l_rev)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_ddpm_step_last_step_is_deterministic():
+    x = jax.random.normal(KEY, (4, 16))
+    e = jax.random.normal(jax.random.fold_in(KEY, 1), (4, 16))
+    n1 = jax.random.normal(jax.random.fold_in(KEY, 2), (4, 16))
+    n2 = jax.random.normal(jax.random.fold_in(KEY, 3), (4, 16))
+    a = [jnp.float32(0.9), jnp.float32(0.5), jnp.float32(0.04)]
+    o1 = ops.ddpm_step(x, e, n1, *a, jnp.int32(0))
+    o2 = ops.ddpm_step(x, e, n2, *a, jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))

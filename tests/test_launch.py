@@ -1,0 +1,99 @@
+"""Launch-layer unit tests: step building on a host mesh, FSDP spec
+transform, ring transform, chunked attention equivalence at the model level,
+schedules."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch, input_specs, make_cfg, supports
+from repro.launch.steps import (PerfOpts, _apply_ring, fsdp_spec)
+from repro.optim import linear_warmup_cosine
+
+KEY = jax.random.PRNGKey(0)
+
+
+class _M16:
+    shape = {"data": 16, "model": 16}
+    axis_names = ("data", "model")
+
+
+def test_fsdp_spec_adds_data_axis_to_largest_free_dim():
+    # MoE expert weight (E, d, f): E on model -> data goes on d (largest)
+    s = fsdp_spec(P("model", None, None), (256, 7168, 2048), _M16())
+    assert s == P("model", "data", None)
+    # already data-sharded -> unchanged
+    s2 = fsdp_spec(P(("data", "model"), None), (4096, 512), _M16())
+    assert s2 == P(("data", "model"), None)
+    # nothing divisible -> unchanged
+    s3 = fsdp_spec(P(None,), (7,), _M16())
+    assert s3 == P(None)
+
+
+def test_ring_transform_only_touches_windowed_attention():
+    arch = get_arch("qwen3-4b")
+    cfg = make_cfg(arch, "long_500k")          # window=8192 variant
+    rcfg = _apply_ring(cfg)
+    blk = rcfg.groups[0].cycle[0]
+    assert blk.attn.ring and blk.attn.window == 8192
+    cfg_full = make_cfg(arch, "decode_32k")    # no window -> untouched
+    rcfg2 = _apply_ring(cfg_full)
+    assert not rcfg2.groups[0].cycle[0].attn.ring
+
+
+def test_ring_cache_shrinks_cache_bytes():
+    from repro.models.lm import lm_init_cache
+    arch = get_arch("qwen3-4b")
+    cfg = make_cfg(arch, "long_500k")
+    sc = SHAPES["long_500k"]
+    full = jax.eval_shape(lambda: lm_init_cache(cfg, 1, sc.seq_len))
+    ring = jax.eval_shape(
+        lambda: lm_init_cache(_apply_ring(cfg), 1, sc.seq_len))
+    fb = sum(x.size for x in jax.tree.leaves(full))
+    rb = sum(x.size for x in jax.tree.leaves(ring))
+    assert rb * 32 < fb  # 524288 / 8192 = 64x fewer slots
+
+
+def test_chunked_impl_matches_xla_at_model_level():
+    from repro.models import lm as lm_mod
+    cfg = get_arch("qwen2-0.5b").make_smoke()
+    p = lm_mod.lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 48), 0, cfg.vocab)
+    l1, _ = lm_mod.lm_forward(p, cfg, toks, impl="xla",
+                              compute_dtype=jnp.float32)
+    l2, _ = lm_mod.lm_forward(p, cfg, toks, impl="chunked",
+                              compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_perf_opts_tags():
+    assert PerfOpts().tag == "base"
+    assert PerfOpts(fsdp=True, bf16_moments=True).tag == "fsdp-bf16m"
+    assert PerfOpts(impl="chunked", ring=True).tag == "chunked-ring"
+
+
+def test_supports_matrix_is_39_of_40():
+    from repro.configs import ARCH_IDS, list_archs
+    n_ok = sum(supports(a, s)[0] for a in list_archs() for s in SHAPES)
+    assert n_ok == 39
+
+
+def test_lr_schedule_warmup_and_decay():
+    f = linear_warmup_cosine(1.0, warmup=10, steps=100)
+    assert float(f(jnp.int32(0))) == 0.0
+    assert abs(float(f(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(f(jnp.int32(100))) < 0.2
+
+
+@pytest.mark.parametrize("arch_id,shape", [
+    ("qwen2-0.5b", "train_4k"), ("mamba2-130m", "decode_32k"),
+    ("deepseek-v2-236b", "prefill_32k"), ("whisper-small", "train_4k")])
+def test_input_specs_are_allocation_free(arch_id, shape):
+    arch = get_arch(arch_id)
+    step, specs = input_specs(arch, shape)
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)

@@ -1,0 +1,121 @@
+"""CompositeLM model-layer tests: group scanning, shared blocks, VLM prefix,
+MTP loss, remat equivalence, property tests on the loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import (GroupCfg, LMCfg, lm_forward, lm_init, lm_loss,
+                          lm_spec, softmax_xent)
+from repro.models.blocks import BlockCfg
+from repro.nn.attention import AttnCfg
+from repro.nn.mlp import MLPCfg
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny(layers=2, shared=False, remat=False):
+    blk = BlockCfg(d_model=32, mixer="attn", ffn="mlp",
+                   attn=AttnCfg(32, 2, 2, 16), mlp=MLPCfg(32, 64),
+                   shared=shared)
+    return LMCfg(name="t", vocab=64, d_model=32,
+                 groups=(GroupCfg((blk,), layers),), remat=remat)
+
+
+def test_scanned_params_have_leading_repeat_dim():
+    cfg = _tiny(layers=3)
+    p = lm_init(KEY, cfg)
+    leaf = p["groups"][0]["stacked"]["0"]["mixer"]["q"]["w"]
+    assert leaf.shape == (3, 32, 32)
+    spec = lm_spec(cfg)
+    sleaf = spec["groups"][0]["stacked"]["0"]["mixer"]["q"]["w"]
+    assert sleaf[0] is None  # repeat dim unsharded
+
+
+def test_shared_block_stores_single_copy():
+    cfg = _tiny(layers=3, shared=True)
+    p = lm_init(KEY, cfg)
+    assert p["groups"][0]["stacked"] == {}
+    leaf = p["groups"][0]["shared"]["0"]["mixer"]["q"]["w"]
+    assert leaf.shape == (32, 32)  # no repeat dim
+
+
+def test_shared_vs_unshared_param_counts():
+    from repro.nn.core import count_params
+    p_shared = lm_init(KEY, _tiny(layers=3, shared=True))
+    p_plain = lm_init(KEY, _tiny(layers=3, shared=False))
+    assert count_params(p_shared) < count_params(p_plain)
+
+
+def test_remat_matches_no_remat():
+    cfg = _tiny(remat=False)
+    cfg_r = _tiny(remat=True)
+    p = lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 8), 0, 64)
+    batch = {"tokens": toks, "labels": toks}
+    g1 = jax.grad(lambda p: lm_loss(p, cfg, batch)[0])(p)
+    g2 = jax.grad(lambda p: lm_loss(p, cfg_r, batch)[0])(p)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_vlm_prefix_embeds_change_text_logits():
+    blk = BlockCfg(d_model=32, mixer="attn", ffn="mlp",
+                   attn=AttnCfg(32, 2, 2, 16), mlp=MLPCfg(32, 64))
+    cfg = LMCfg(name="v", vocab=64, d_model=32,
+                groups=(GroupCfg((blk,), 2),), n_prefix=4,
+                prefix_embed_dim=16, tie_embeddings=False)
+    p = lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (1, 8), 0, 64)
+    pe1 = jax.random.normal(KEY, (1, 4, 16))
+    pe2 = pe1 + 1.0
+    l1, _ = lm_forward(p, cfg, toks, prefix_embeds=pe1)
+    l2, _ = lm_forward(p, cfg, toks, prefix_embeds=pe2)
+    assert l1.shape == (1, 12, 64)  # prefix slots prepended
+    assert float(jnp.abs(l1[:, 4:] - l2[:, 4:]).max()) > 1e-3
+
+
+def test_mtp_adds_loss_term():
+    from repro.configs import get_arch
+    cfg = get_arch("deepseek-v3-671b").make_smoke()
+    assert cfg.mtp
+    p = lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+    loss, m = lm_loss(p, cfg, {"tokens": toks, "labels": toks})
+    assert "mtp_xent" in m
+    assert float(loss) > float(m["xent"])  # mtp + aux on top
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_softmax_xent_bounds_and_masking(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    logits = jax.random.normal(k1, (2, 6, 16))
+    labels = jax.random.randint(k2, (2, 6), 0, 16)
+    loss = float(softmax_xent(logits, labels))
+    assert loss >= 0.0
+    # fully masked -> 0
+    assert float(softmax_xent(logits, jnp.full((2, 6), -100))) == 0.0
+    # perfect logits -> near 0
+    perfect = jax.nn.one_hot(labels, 16) * 100.0
+    assert float(softmax_xent(perfect, labels)) < 1e-3
+
+
+def test_positions_offset_consistency_sliding_window():
+    """Sliding-window forward at window=4: token t must not attend beyond 4
+    back — verify by perturbing an early token."""
+    blk = BlockCfg(d_model=32, mixer="attn", ffn="mlp",
+                   attn=AttnCfg(32, 2, 2, 16, window=4), mlp=MLPCfg(32, 64))
+    cfg = LMCfg(name="w", vocab=64, d_model=32,
+                groups=(GroupCfg((blk,), 1),))
+    p = lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (1, 12), 0, 64)
+    toks2 = toks.at[0, 0].set((int(toks[0, 0]) + 1) % 64)
+    l1, _ = lm_forward(p, cfg, toks, compute_dtype=jnp.float32)
+    l2, _ = lm_forward(p, cfg, toks2, compute_dtype=jnp.float32)
+    # positions >= 4 cannot see token 0 (single layer, window 4)
+    np.testing.assert_allclose(np.asarray(l1[0, 4:]), np.asarray(l2[0, 4:]),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(l1[0, 0] - l2[0, 0]).max()) > 1e-4

@@ -1,0 +1,227 @@
+"""Tests for the RL stack: diffusion schedule/sampler, D3PG updates, DDQN
+amender/updates, replay buffers, GA baseline, and a short T2DRL episode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (D3PGCfg, DDQNCfg, EnvCfg, GACfg, T2DRLCfg,
+                        actor_act, amend_caching, critic_q, d3pg_init,
+                        d3pg_update, ddqn_act, ddqn_init, ddqn_update,
+                        env_reset, ga_allocate, make_actor_schedule,
+                        make_models, run_episode, t2drl_init)
+from repro.core.baselines import random_cache, static_popular_cache
+from repro.core.buffers import buffer_add, buffer_init, buffer_sample
+from repro.diffusion import make_schedule, reverse_sample_actions, denoiser_init
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- diffusion schedule / sampler ----------------------------------------------
+
+def test_paper_beta_schedule_formula():
+    L, bmin, bmax = 10, 0.1, 10.0
+    sched = make_schedule(L, beta_min=bmin, beta_max=bmax, kind="paper")
+    l = np.arange(1, L + 1)
+    expect = 1 - np.exp(-bmin / L - (2 * l - 1) / (2 * L**2) * (bmax - bmin))
+    np.testing.assert_allclose(np.asarray(sched.betas), expect, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sched.alpha_bars),
+                               np.cumprod(1 - expect), rtol=1e-5)
+
+
+def test_reverse_sampler_shapes_and_range():
+    cfg = D3PGCfg(state_dim=12, action_dim=6, L=5)
+    sched = make_actor_schedule(cfg)
+    p = denoiser_init(KEY, 12, 6)
+    s = jax.random.normal(KEY, (4, 12))
+    a = reverse_sample_actions(p, sched, s, KEY, 6)
+    assert a.shape == (4, 6)
+    assert float(jnp.min(a)) >= 0.0 and float(jnp.max(a)) <= 1.0
+
+
+def test_reverse_sampler_is_differentiable():
+    cfg = D3PGCfg(state_dim=8, action_dim=4, L=3)
+    sched = make_actor_schedule(cfg)
+    p = denoiser_init(KEY, 8, 4)
+    s = jax.random.normal(KEY, (8,))
+
+    def f(p):
+        return jnp.sum(reverse_sample_actions(p, sched, s, KEY, 4))
+
+    g = jax.grad(f)(p)
+    gnorm = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert np.isfinite(gnorm) and gnorm > 0.0
+
+
+def test_pallas_sampler_matches_xla_sampler():
+    cfg = D3PGCfg(state_dim=8, action_dim=4, L=4)
+    sched = make_actor_schedule(cfg)
+    p = denoiser_init(KEY, 8, 4)
+    s = jax.random.normal(KEY, (3, 8))
+    a1 = reverse_sample_actions(p, sched, s, KEY, 4, impl="xla")
+    a2 = reverse_sample_actions(p, sched, s, KEY, 4, impl="pallas")
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                               rtol=1e-4, atol=1e-5)
+
+
+# -- buffers -------------------------------------------------------------------
+
+def test_buffer_cyclic_overwrite_and_sample():
+    buf = buffer_init(4, {"x": jnp.zeros(2), "y": jnp.int32(0)})
+    for i in range(6):
+        buf = buffer_add(buf, {"x": jnp.full(2, float(i)),
+                               "y": jnp.int32(i)})
+    assert int(buf["size"]) == 4
+    assert int(buf["ptr"]) == 2
+    # oldest entries (0, 1) were overwritten by (4, 5)
+    ys = set(np.asarray(buf["data"]["y"]).tolist())
+    assert ys == {2, 3, 4, 5}
+    batch = buffer_sample(buf, KEY, 16)
+    assert batch["x"].shape == (16, 2)
+    assert set(np.asarray(batch["y"]).tolist()) <= ys
+
+
+# -- DDQN ---------------------------------------------------------------------
+
+@given(st.integers(0, 2**10 - 1))
+@settings(max_examples=40, deadline=None)
+def test_caching_amender_binary_decode(a_int):
+    cfg = DDQNCfg(M=10)
+    rho = amend_caching(jnp.int32(a_int), cfg)
+    bits = [(a_int >> (10 - m)) % 2 for m in range(1, 11)]
+    np.testing.assert_array_equal(np.asarray(rho), np.array(bits, np.float32))
+
+
+def test_feasible_amender_respects_capacity():
+    cfg = DDQNCfg(M=6, feasible_amender=True)
+    c = jnp.array([4.0, 3.0, 5.0, 2.0, 6.0, 1.0])
+    rho = amend_caching(jnp.int32(2**6 - 1), cfg, c, C=8.0)  # all requested
+    assert float(jnp.sum(rho * c)) <= 8.0
+
+
+def test_ddqn_update_reduces_td_error():
+    cfg = DDQNCfg(M=4, J=3, lr=1e-2)
+    params = ddqn_init(KEY, cfg)
+    batch = {"s": jnp.zeros(32, jnp.int32), "a": jnp.ones(32, jnp.int32),
+             "r": jnp.full(32, 5.0), "s1": jnp.ones(32, jnp.int32)}
+    _, loss0 = ddqn_update(params, cfg, batch)
+    p = params
+    for _ in range(50):
+        p, loss = ddqn_update(p, cfg, batch)
+    assert float(loss) < float(loss0)
+
+
+def test_ddqn_act_greedy_vs_random():
+    cfg = DDQNCfg(M=4, J=3)
+    params = ddqn_init(KEY, cfg)
+    a_greedy = ddqn_act(params, cfg, jnp.int32(0), KEY, jnp.float32(0.0))
+    a_greedy2 = ddqn_act(params, cfg, jnp.int32(0),
+                         jax.random.fold_in(KEY, 7), jnp.float32(0.0))
+    assert int(a_greedy) == int(a_greedy2)  # greedy is key-independent
+    draws = {int(ddqn_act(params, cfg, jnp.int32(0),
+                          jax.random.fold_in(KEY, i), jnp.float32(1.0)))
+             for i in range(20)}
+    assert len(draws) > 3  # eps=1 explores
+
+
+# -- D3PG ---------------------------------------------------------------------
+
+def _d3pg_batch(cfg, env_cfg, n=16):
+    ks = jax.random.split(KEY, 6)
+    U, M = env_cfg.U, env_cfg.M
+    return {
+        "s": jax.random.normal(ks[0], (n, cfg.state_dim)),
+        "a": jax.random.uniform(ks[1], (n, cfg.action_dim)),
+        "r": jax.random.normal(ks[2], (n,)),
+        "s1": jax.random.normal(ks[3], (n, cfg.state_dim)),
+        "req": jax.random.randint(ks[4], (n, U), 0, M),
+        "rho": jnp.ones((n, M)),
+        "req1": jax.random.randint(ks[5], (n, U), 0, M),
+        "rho1": jnp.ones((n, M)),
+    }
+
+
+def test_d3pg_update_moves_both_networks():
+    env_cfg = EnvCfg(U=4, M=4)
+    cfg = D3PGCfg(state_dim=env_cfg.state_dim, action_dim=env_cfg.action_dim,
+                  L=3, lr_actor=1e-3, lr_critic=1e-3)
+    params = d3pg_init(KEY, cfg)
+    sched = make_actor_schedule(cfg)
+    batch = _d3pg_batch(cfg, env_cfg)
+    new, losses = d3pg_update(params, cfg, sched, batch, KEY)
+    for name in ("actor", "critic"):
+        delta = max(float(jnp.abs(a - b).max()) for a, b in zip(
+            jax.tree.leaves(params[name]), jax.tree.leaves(new[name])))
+        assert delta > 0.0, name
+        # target networks move slowly (Polyak 0.005)
+        tdelta = max(float(jnp.abs(a - b).max()) for a, b in zip(
+            jax.tree.leaves(params[name + "_t"]),
+            jax.tree.leaves(new[name + "_t"])))
+        assert 0.0 < tdelta < delta
+    assert np.isfinite(float(losses["critic_loss"]))
+
+
+def test_ddpg_mlp_actor_variant():
+    env_cfg = EnvCfg(U=4, M=4)
+    cfg = D3PGCfg(state_dim=env_cfg.state_dim, action_dim=env_cfg.action_dim,
+                  actor_kind="mlp")
+    params = d3pg_init(KEY, cfg)
+    sched = make_actor_schedule(cfg)
+    s = jax.random.normal(KEY, (env_cfg.state_dim,))
+    a = actor_act(params["actor"], cfg, sched, s, KEY)
+    assert a.shape == (env_cfg.action_dim,)
+    assert float(jnp.min(a)) >= 0.0 and float(jnp.max(a)) <= 1.0
+
+
+# -- baselines -----------------------------------------------------------------
+
+def test_static_and_random_cache_respect_capacity():
+    env_cfg = EnvCfg(U=4, M=8, C=15.0)
+    models = make_models(KEY, env_cfg)
+    rho_s = static_popular_cache(models, env_cfg)
+    assert float(jnp.sum(rho_s * models.c)) <= env_cfg.C
+    for i in range(5):
+        rho_r = random_cache(jax.random.fold_in(KEY, i), models, env_cfg)
+        assert float(jnp.sum(rho_r * models.c)) <= env_cfg.C
+
+
+def test_ga_allocation_satisfies_constraints_and_beats_random():
+    env_cfg = EnvCfg(U=5, M=5)
+    models = make_models(KEY, env_cfg)
+    state = env_reset(KEY, env_cfg)
+    state = state._replace(rho=jnp.ones(env_cfg.M))
+    ga = GACfg(pop=16, gens=10)
+    b, xi = ga_allocate(KEY, state, env_cfg, models, ga)
+    assert abs(float(jnp.sum(b)) - 1.0) < 1e-4
+    assert abs(float(jnp.sum(xi)) - 1.0) < 1e-4
+    from repro.core import slot_metrics
+    G_ga = float(jnp.mean(slot_metrics(state, env_cfg, models, b, xi)["G"]))
+    b_eq = jnp.full((env_cfg.U,), 1.0 / env_cfg.U)
+    G_eq = float(jnp.mean(slot_metrics(state, env_cfg, models, b_eq,
+                                       b_eq)["G"]))
+    assert G_ga <= G_eq + 1e-3  # GA at least matches the equal split
+
+
+# -- T2DRL integration -----------------------------------------------------------
+
+def test_t2drl_episode_runs_and_buffers_fill():
+    cfg = T2DRLCfg(env=EnvCfg(U=4, M=4, T=3, K=3), warmup=5,
+                   lr_actor=1e-4, lr_critic=1e-4, lr_ddqn=1e-3, L=2)
+    ts = t2drl_init(KEY, cfg)
+    ts, stats = run_episode(ts, cfg, KEY, jnp.float32(0.5),
+                            jnp.float32(0.1), train=True)
+    assert int(ts["ebuf"]["size"]) == 9      # T*K slot transitions
+    assert int(ts["fbuf"]["size"]) == 2      # T-1 frame transitions
+    for k in ("episode_reward", "hit_ratio", "utility"):
+        assert np.isfinite(float(stats[k])), k
+    assert 0.0 <= float(stats["hit_ratio"]) <= 1.0
+
+
+def test_t2drl_eval_deterministic_given_key():
+    cfg = T2DRLCfg(env=EnvCfg(U=4, M=4, T=2, K=2), L=2)
+    ts = t2drl_init(KEY, cfg)
+    _, s1 = run_episode(ts, cfg, KEY, jnp.float32(0.0), jnp.float32(0.0),
+                        train=False)
+    _, s2 = run_episode(ts, cfg, KEY, jnp.float32(0.0), jnp.float32(0.0),
+                        train=False)
+    assert float(s1["episode_reward"]) == float(s2["episode_reward"])
