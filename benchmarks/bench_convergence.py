@@ -2,6 +2,11 @@
 
 6a: T2DRL episodic reward for different denoising-step counts L.
 6b: T2DRL vs DDPG-based T2DRL reward curves.
+
+``--num-envs B`` trains B parallel cells (multi-seed) through the
+vectorized core in one compiled run per method; curves then carry a
+trailing (B,) seed axis and the summary statistics add a cross-seed
+standard deviation.
 """
 from __future__ import annotations
 
@@ -13,28 +18,38 @@ from repro.core import EnvCfg
 from .common import history_to_list, save_json, train_and_eval
 
 
-def run(episodes: int = 150, Ls=(1, 5, 10), seed: int = 0, verbose=True):
+def _summary(r: np.ndarray) -> dict:
+    """Final-reward summary; r is (episodes,) or (episodes, B)."""
+    last = r[-10:]
+    out = {"final_reward_mean_last10": float(last.mean())}
+    if r.ndim == 2:
+        out["final_reward_seed_std"] = float(last.mean(axis=0).std())
+    return out
+
+
+def run(episodes: int = 150, Ls=(1, 5, 10), seed: int = 0,
+        num_envs: int = 1, verbose=True):
     env = EnvCfg(U=10, M=10, T=10, K=10)
-    out = {"episodes": episodes, "curves": {}}
+    out = {"episodes": episodes, "num_envs": num_envs, "curves": {}}
 
     # Fig 6a: denoising-step sweep
     for L in Ls:
         hist, ev = train_and_eval("t2drl", env=env, episodes=episodes, L=L,
-                                  seed=seed)
+                                  seed=seed, num_envs=num_envs)
         r = np.asarray(hist["episode_reward"])
         out["curves"][f"t2drl_L{L}"] = history_to_list(hist)
-        out[f"t2drl_L{L}"] = {
-            "final_reward_mean_last10": float(r[-10:].mean()), **ev}
+        out[f"t2drl_L{L}"] = {**_summary(r), **ev}
         if verbose:
             print(f"T2DRL L={L:2d}: reward(last10)={r[-10:].mean():9.2f} "
                   f"hit={ev['hit_ratio']:.3f} G={ev['utility']:.2f} "
                   f"[{ev['train_s']}s]", flush=True)
 
     # Fig 6b: DDPG baseline
-    hist, ev = train_and_eval("ddpg", env=env, episodes=episodes, seed=seed)
+    hist, ev = train_and_eval("ddpg", env=env, episodes=episodes, seed=seed,
+                              num_envs=num_envs)
     r = np.asarray(hist["episode_reward"])
     out["curves"]["ddpg"] = history_to_list(hist)
-    out["ddpg"] = {"final_reward_mean_last10": float(r[-10:].mean()), **ev}
+    out["ddpg"] = {**_summary(r), **ev}
     if verbose:
         print(f"DDPG      : reward(last10)={r[-10:].mean():9.2f} "
               f"hit={ev['hit_ratio']:.3f} G={ev['utility']:.2f} "
@@ -48,8 +63,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--episodes", type=int, default=150)
     ap.add_argument("--Ls", type=int, nargs="+", default=[1, 5, 10])
+    ap.add_argument("--num-envs", type=int, default=1,
+                    help="parallel cells (multi-seed) per method")
     args = ap.parse_args()
-    run(args.episodes, tuple(args.Ls))
+    run(args.episodes, tuple(args.Ls), num_envs=args.num_envs)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,14 @@
-"""Table 3 — algorithm running time per time slot (ms) vs number of users.
+"""Table 3 — algorithm running time per time slot (ms) vs number of users —
+plus the vectorized training-core throughput (episodes·envs/sec).
 
-Measures the jitted per-slot *inference* path of each allocator on this host
-(CPU here, RTX A5000 in the paper — absolute numbers differ, the ordering
-SCHRS >> T2DRL > DDPG is the reproduced claim)."""
+The per-slot section measures the jitted *inference* path of each allocator
+on this host (CPU here, RTX A5000 in the paper — absolute numbers differ,
+the ordering SCHRS >> T2DRL > DDPG is the reproduced claim).  The
+throughput section measures end-to-end multi-cell training of the batched
+vector-env core (DESIGN.md §6) for B in {1, 8}: in shared-learner mode the
+per-slot optimizer step costs the same at any B, so B=8 must beat B=1's
+aggregate throughput by well over 2x even on CPU; the fully independent
+multi-seed mode is reported alongside for comparison."""
 from __future__ import annotations
 
 import argparse
@@ -13,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import (EnvCfg, GACfg, T2DRLCfg, actor_act, env_reset,
                         ga_allocate, make_actor_schedule, make_models,
-                        observe, t2drl_init)
+                        observe, run_training, t2drl_init, t2drl_init_batch)
 from .common import save_json
 
 
@@ -59,12 +65,55 @@ def run(users=(10, 12, 14, 16, 18), seed: int = 0, verbose=True):
     return out
 
 
+def run_throughput(num_envs=(1, 8), episodes: int = 4, seed: int = 0,
+                   policies=("shared", "independent"), verbose=True):
+    """Vector-env training throughput: episodes·envs/sec for B parallel
+    edge cells, one fully-jitted ``run_training`` call per measurement
+    (compile excluded; the paper's U=M=T=K=10 setup)."""
+    out = {"episodes": episodes, "throughput": {}}
+    key = jax.random.PRNGKey(seed)
+    for policy in policies:
+        cfg = T2DRLCfg(env=EnvCfg(U=10, M=10, T=10, K=10), policy=policy,
+                       warmup=100, lr_actor=1e-4, lr_critic=1e-3,
+                       lr_ddqn=1e-3, L=5)
+        for B in num_envs:
+            ts = t2drl_init_batch(key, cfg, B)
+            idx = jnp.arange(episodes)
+            jax.block_until_ready(run_training(ts, cfg, key, idx))  # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(run_training(ts, cfg, key, idx))
+            dt = time.perf_counter() - t0
+            thr = episodes * B / dt
+            out["throughput"][f"{policy}_B{B}"] = thr
+            if verbose:
+                print(f"{policy:12s} B={B}: {dt:6.2f}s for {episodes} eps "
+                      f"-> {thr:7.2f} ep*envs/s", flush=True)
+        b_lo, b_hi = min(num_envs), max(num_envs)
+        lo = out["throughput"][f"{policy}_B{b_lo}"]
+        hi = out["throughput"][f"{policy}_B{b_hi}"]
+        out["throughput"][f"{policy}_speedup"] = hi / lo
+        if verbose:
+            print(f"{policy:12s} aggregate speedup B={b_hi} vs B={b_lo}: "
+                  f"{hi / lo:.2f}x", flush=True)
+    save_json("throughput.json", out)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--users", type=int, nargs="+",
                     default=[10, 12, 14, 16, 18])
+    ap.add_argument("--num-envs", type=int, nargs="+", default=[1, 8])
+    ap.add_argument("--episodes", type=int, default=4)
+    ap.add_argument("--skip-slot", action="store_true",
+                    help="skip the per-slot Table 3 section")
+    ap.add_argument("--skip-throughput", action="store_true",
+                    help="skip the vector-env training throughput section")
     args = ap.parse_args()
-    run(tuple(args.users))
+    if not args.skip_slot:
+        run(tuple(args.users))
+    if not args.skip_throughput:
+        run_throughput(tuple(args.num_envs), episodes=args.episodes)
 
 
 if __name__ == "__main__":

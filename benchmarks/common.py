@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import T2DRLCfg, EnvCfg, eval_t2drl, t2drl_init, train_t2drl
+from repro.core import (T2DRLCfg, EnvCfg, eval_t2drl, t2drl_init,
+                        t2drl_init_batch, train_t2drl)
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
 
@@ -38,15 +39,23 @@ def method_cfg(method: str, *, env: EnvCfg, episodes: int,
 
 def train_and_eval(method: str, *, env: EnvCfg, episodes: int,
                    eval_episodes: int = 5, L: int = 5, seed: int = 0,
-                   **overrides):
-    """Train (if learning-based) then greedy-eval.  Returns (history, eval)."""
+                   num_envs: int = 1, **overrides):
+    """Train (if learning-based) then greedy-eval.  Returns (history, eval).
+
+    ``num_envs`` trains B parallel cells through the vectorized core
+    (history leaves gain a trailing (B,) axis); eval means over cells."""
     cfg = method_cfg(method, env=env, episodes=episodes, L=L, seed=seed,
                      **overrides)
     t0 = time.time()
     if method in ("t2drl", "ddpg"):
-        ts, hist = train_t2drl(cfg, episodes=episodes)
+        ts, hist = train_t2drl(cfg, episodes=episodes, num_envs=num_envs)
     else:
-        ts = t2drl_init(jax.random.PRNGKey(cfg.seed), cfg)
+        # same init-key derivation as train_t2drl, so the non-learning
+        # baselines run on the SAME model zoos as the learning methods
+        # (cross-method deltas then measure the algorithm, not zoo luck)
+        k_init, _ = jax.random.split(jax.random.PRNGKey(cfg.seed))
+        ts = (t2drl_init(k_init, cfg) if num_envs == 1
+              else t2drl_init_batch(k_init, cfg, num_envs))
         hist = None
     ev = eval_t2drl(ts, cfg, episodes=eval_episodes)
     ev = {k: float(v) for k, v in ev.items()}

@@ -28,6 +28,8 @@ def main() -> None:
         print("== Table 3: per-slot running time ==", flush=True)
         from . import bench_runtime
         bench_runtime.run(users=(10, 12, 14, 16, 18))
+        print("\n== vector-env training throughput ==", flush=True)
+        bench_runtime.run_throughput((1, 8), episodes=4)
     if want("roofline"):
         print("\n== §Roofline: dry-run table ==", flush=True)
         from . import bench_roofline

@@ -1,14 +1,22 @@
 """The paper's contribution: two-timescale model caching + resource
 allocation for edge AIGC services (environment, D3PG, DDQN, baselines,
-T2DRL driver)."""
+T2DRL driver) — with a vectorized, fully-jitted multi-cell training core
+(DESIGN.md §6)."""
 from .env import (EnvCfg, EnvState, ModelParams, env_reset,  # noqa: F401
-                  env_new_frame, env_step_slot, make_models, observe,
-                  slot_metrics, slot_reward)
+                  env_new_frame, env_reset_batch, env_step_slot,
+                  make_models, make_models_batch, make_user_masks,
+                  masked_mean, observe, slot_metrics, slot_reward)
 from .quality import tv_quality, gen_delay  # noqa: F401
-from .ddqn import DDQNCfg, amend_caching, ddqn_act, ddqn_init, ddqn_update  # noqa: F401
+from .ddqn import (DDQNCfg, amend_caching, ddqn_act, ddqn_init,  # noqa: F401
+                   ddqn_init_batch, ddqn_update, ddqn_update_batch)
 from .d3pg import (D3PGCfg, actor_act, amend_actions, critic_q, d3pg_init,  # noqa: F401
-                   d3pg_update, make_actor_schedule)
-from .baselines import (GACfg, ga_allocate, random_cache, rcars_allocate,  # noqa: F401
-                        static_popular_cache)
-from .t2drl import (T2DRLCfg, eval_t2drl, run_episode, t2drl_init,  # noqa: F401
-                    train_t2drl)
+                   d3pg_init_batch, d3pg_update, d3pg_update_batch,
+                   make_actor_schedule)
+from .buffers import (buffer_add, buffer_add_batch, buffer_init,  # noqa: F401
+                      buffer_init_batch, buffer_sample, buffer_sample_batch)
+from .baselines import (GACfg, ga_allocate, random_cache,  # noqa: F401
+                        random_cache_batch, rcars_allocate,
+                        static_popular_cache, static_popular_cache_batch)
+from .t2drl import (T2DRLCfg, episode_epsilon, episode_sigma,  # noqa: F401
+                    eval_t2drl, run_episode, run_eval, run_training,
+                    t2drl_init, t2drl_init_batch, train_t2drl)

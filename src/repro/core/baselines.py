@@ -43,6 +43,16 @@ def random_cache(key, models: ModelParams, cfg: EnvCfg) -> jnp.ndarray:
     return rho
 
 
+def static_popular_cache_batch(models: ModelParams, cfg: EnvCfg):
+    """Per-cell SCHRS caching for a batched model zoo (leading (B,) axis)."""
+    return jax.vmap(lambda m: static_popular_cache(m, cfg))(models)
+
+
+def random_cache_batch(keys, models: ModelParams, cfg: EnvCfg):
+    """Per-cell RCARS caching; keys: (B, 2), models batched on axis 0."""
+    return jax.vmap(lambda k, m: random_cache(k, m, cfg))(keys, models)
+
+
 # -- RCARS allocation ---------------------------------------------------------
 
 def rcars_allocate(state: EnvState, cfg: EnvCfg):
@@ -89,7 +99,11 @@ def ga_allocate(key, state: EnvState, cfg: EnvCfg, models: ModelParams,
     """Evolve allocation chromosomes for the current slot; returns (b, xi).
 
     Fitness = the slot objective (12) plus the deadline penalty of (23), so
-    the GA respects constraint (11h) the same way the DRL agents do."""
+    the GA respects constraint (11h) the same way the DRL agents do.  The
+    population is warm-started with the all-0.5 chromosome (which amends
+    to the equal split over active/cached users); with elitism this
+    guarantees the result is never worse (in fitness) than that amended
+    warm-start point."""
     U = cfg.U
 
     def fitness(chrom):
@@ -100,6 +114,7 @@ def ga_allocate(key, state: EnvState, cfg: EnvCfg, models: ModelParams,
 
     k0, key = jax.random.split(key)
     pop = jax.random.uniform(k0, (ga.pop, 2 * U))
+    pop = pop.at[0].set(0.5)    # warm start: amends to the equal split
     fit = jax.vmap(fitness)(pop)
 
     def gen(carry, k):

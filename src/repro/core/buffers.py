@@ -28,3 +28,29 @@ def buffer_add(buf, item):
 def buffer_sample(buf, key, batch: int):
     idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf["size"], 1))
     return jax.tree.map(lambda d: d[idx], buf["data"])
+
+
+# -- batched (per-env leading axis) -------------------------------------------
+#
+# The vectorized trainer keeps B independent replay buffers as one pytree
+# with a leading (B,) axis on every leaf, including ptr/size.  Each cell
+# writes and wraps around independently; the helpers below are the public
+# contract (DESIGN.md §6) and are what run_episode becomes under vmap.
+
+def buffer_init_batch(num_envs: int, capacity: int, item_example):
+    """B independent buffers: leaves are (B, capacity, ...) with per-env
+    ptr/size of shape (B,)."""
+    buf = buffer_init(capacity, item_example)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (num_envs,) + a.shape).copy(), buf)
+
+
+def buffer_add_batch(buf, items):
+    """Add one item per env; items' leaves carry a leading (B,) axis."""
+    return jax.vmap(buffer_add)(buf, items)
+
+
+def buffer_sample_batch(buf, keys, batch: int):
+    """Sample a (B, batch, ...) minibatch — one independent draw per env.
+    keys: (B, 2) PRNG keys."""
+    return jax.vmap(buffer_sample, in_axes=(0, 0, None))(buf, keys, batch)

@@ -79,7 +79,8 @@ def critic_q(critic_params, state, action):
                                                     axis=-1))[..., 0]
 
 
-def amend_actions(raw, req, rho, U: int, *, b_floor: float = 0.01):
+def amend_actions(raw, req, rho, U: int, *, b_floor: float = 0.01,
+                  mask=None):
     """The paper's action amender: project raw [0,1]^{2U} onto the bandwidth
     simplex (11e) and the cache-gated compute simplex (11f)-(11g).
 
@@ -87,31 +88,48 @@ def amend_actions(raw, req, rho, U: int, *, b_floor: float = 0.01):
     shares: a raw share of exactly 0 would give a user zero rate and an
     unbounded upload delay (Eq. 2 -> Eq. 4), which explodes the reward scale
     and destabilises the critic.  This is a numerical guard, not a change to
-    the constraint set — the amended b still lies on the simplex (11e)."""
+    the constraint set — the amended b still lies on the simplex (11e).
+
+    ``mask`` (0/1 over the trailing user axis) restricts both simplexes to
+    the active users of a heterogeneous-population cell: inactive users get
+    exactly zero bandwidth and compute."""
     b_t, xi_t = raw[..., :U], raw[..., U:]
     b_t = b_t + b_floor
+    if mask is not None:
+        b_t = b_t * mask
     b = b_t / (jnp.sum(b_t, axis=-1, keepdims=True) + 1e-9)
     gate = rho[..., req] if rho.ndim == 1 else jnp.take_along_axis(rho, req, axis=-1)
+    if mask is not None:
+        gate = gate * mask
     xi = xi_t * gate / (jnp.sum(gate * xi_t, axis=-1, keepdims=True) + 1e-9)
     return b, xi
 
 
 def d3pg_update(params, cfg: D3PGCfg, sched, batch, key, *,
-                lr_a=None, lr_c=None, impl: str = "xla"):
+                lr_a=None, lr_c=None, impl: str = "xla", mask=None):
     """One minibatch step of Eqs. (24)-(29).
 
     batch: {s, a, r, s1, req1, rho1} — a is the *amended* action executed;
-    the target action for s1 is re-amended using req1/rho1."""
+    the target action for s1 is re-amended using req1/rho1.  ``mask`` is an
+    active-user mask — (U,) shared across the minibatch, or (batch, U)
+    per-row when the rows come from different cells — so target and policy
+    actions are amended on the same restricted simplex the env ran on."""
     lr_a = cfg.lr_actor if lr_a is None else lr_a
     lr_c = cfg.lr_critic if lr_c is None else lr_c
     k_t, k_pi = jax.random.split(key)
     U = cfg.action_dim // 2
+    if mask is not None and jnp.ndim(mask) == 2:
+        _amend_row = jax.vmap(
+            lambda raw, req, rho, m: amend_actions(raw, req, rho, U, mask=m))
+        amend = lambda raw, req, rho: _amend_row(raw, req, rho, mask)
+    else:
+        amend = jax.vmap(lambda raw, req, rho: amend_actions(
+            raw, req, rho, U, mask=mask))
 
     # --- critic (24) ---------------------------------------------------------
     raw1 = actor_act(params["actor_t"], cfg, sched, batch["s1"], k_t,
                      impl=impl)
-    b1, xi1 = jax.vmap(amend_actions, in_axes=(0, 0, 0, None))(
-        raw1, batch["req1"], batch["rho1"], U)
+    b1, xi1 = amend(raw1, batch["req1"], batch["rho1"])
     a1 = jnp.concatenate([b1, xi1], axis=-1)
     y_hat = batch["r"] + cfg.omega * critic_q(params["critic_t"],
                                               batch["s1"], a1)
@@ -128,8 +146,7 @@ def d3pg_update(params, cfg: D3PGCfg, sched, batch, key, *,
     # --- actor (26)-(27): maximise Q(s, amend(pi(s))) ------------------------
     def actor_loss(a_params):
         raw = actor_act(a_params, cfg, sched, batch["s"], k_pi, impl=impl)
-        b, xi = jax.vmap(amend_actions, in_axes=(0, 0, 0, None))(
-            raw, batch["req"], batch["rho"], U)
+        b, xi = amend(raw, batch["req"], batch["rho"])
         act = jnp.concatenate([b, xi], axis=-1)
         return -jnp.mean(critic_q(critic_new, batch["s"], act))
 
@@ -145,3 +162,19 @@ def d3pg_update(params, cfg: D3PGCfg, sched, batch, key, *,
                                    cfg.eps_target),
            "opt_a": opt_a_new, "opt_c": opt_c_new}
     return new, {"critic_loss": c_loss, "actor_loss": a_loss}
+
+
+# -- batched (per-env leading axis) -------------------------------------------
+
+def d3pg_init_batch(keys, cfg: D3PGCfg):
+    """B independent actor/critic/optimizer stacks; keys: (B, 2)."""
+    return jax.vmap(lambda k: d3pg_init(k, cfg))(keys)
+
+
+def d3pg_update_batch(params, cfg: D3PGCfg, sched, batch, keys, **kw):
+    """One minibatch step per env in a single compiled call.  ``params`` and
+    ``batch`` carry a leading (B,) axis; keys: (B, 2).  Returns
+    (params, losses) with per-env losses of shape (B,)."""
+    return jax.vmap(
+        lambda p, b, k: d3pg_update(p, cfg, sched, b, k, **kw))(
+            params, batch, keys)

@@ -47,20 +47,23 @@ def _obs(gamma_idx, cfg: DDQNCfg):
 
 
 def ddqn_act(params, cfg: DDQNCfg, gamma_idx, key, eps):
-    """epsilon-greedy over the 2^M caching actions."""
+    """epsilon-greedy over the 2^M caching actions.  ``gamma_idx`` may be a
+    scalar or carry leading batch axes (one key drives the whole batch)."""
     qv = mlp_apply(params["q"], _obs(gamma_idx, cfg))
-    greedy = jnp.argmax(qv)
+    greedy = jnp.argmax(qv, axis=-1)
     k1, k2 = jax.random.split(key)
-    rand = jax.random.randint(k1, (), 0, cfg.n_actions)
-    return jnp.where(jax.random.uniform(k2) < eps, rand, greedy).astype(jnp.int32)
+    rand = jax.random.randint(k1, greedy.shape, 0, cfg.n_actions)
+    explore = jax.random.uniform(k2, greedy.shape) < eps
+    return jnp.where(explore, rand, greedy).astype(jnp.int32)
 
 
 def amend_caching(a_int, cfg: DDQNCfg, c=None, C: float = 0.0):
-    """Paper's amender: rho_m = floor(a / 2^(M-m)) mod 2.  With
-    ``cfg.feasible_amender`` also greedily evicts the largest cached model
-    until the storage constraint (11d) holds."""
+    """Paper's amender: rho_m = floor(a / 2^(M-m)) mod 2, batch-safe over
+    leading axes of ``a_int``.  With ``cfg.feasible_amender`` also greedily
+    evicts the largest cached model until the storage constraint (11d)
+    holds (single-env only)."""
     m = jnp.arange(1, cfg.M + 1)
-    rho = (a_int // (2 ** (cfg.M - m))) % 2
+    rho = (jnp.asarray(a_int)[..., None] // (2 ** (cfg.M - m))) % 2
     rho = rho.astype(jnp.float32)
     if cfg.feasible_amender and c is not None:
         def evict(_, rho):
@@ -93,3 +96,16 @@ def ddqn_update(params, cfg: DDQNCfg, batch, *, lr=None):
     return {"q": q_new,
             "q_target": soft_update(params["q_target"], q_new, cfg.kappa),
             "opt": opt_new}, loss
+
+
+# -- batched (per-env leading axis) -------------------------------------------
+
+def ddqn_init_batch(keys, cfg: DDQNCfg):
+    """B independent Q/target/optimizer stacks; keys: (B, 2)."""
+    return jax.vmap(lambda k: ddqn_init(k, cfg))(keys)
+
+
+def ddqn_update_batch(params, cfg: DDQNCfg, batch, **kw):
+    """One minibatch step per env; ``params``/``batch`` carry a leading
+    (B,) axis.  Returns (params, per-env losses of shape (B,))."""
+    return jax.vmap(lambda p, b: ddqn_update(p, cfg, b, **kw))(params, batch)

@@ -95,6 +95,12 @@ def make_models(key, cfg: EnvCfg) -> ModelParams:
         d_op=u(ks[7], cfg.d_op_mb[0], cfg.d_op_mb[1]) * MB_BITS)
 
 
+def make_models_batch(keys, cfg: EnvCfg) -> ModelParams:
+    """Independent model zoos for B edge cells: every leaf gains a leading
+    (B,) axis.  keys: (B, 2) PRNG keys, one per cell."""
+    return jax.vmap(lambda k: make_models(k, cfg))(keys)
+
+
 class EnvState(NamedTuple):
     key: jnp.ndarray
     gamma_idx: jnp.ndarray    # () int32 — popularity state (per frame)
@@ -178,6 +184,24 @@ def env_reset(key, cfg: EnvCfg) -> EnvState:
     return _refresh_slot(k, st._replace(key=knext), cfg, new_lambda=False)
 
 
+def env_reset_batch(keys, cfg: EnvCfg) -> EnvState:
+    """Reset B independent cells; every EnvState leaf gains a leading (B,)
+    axis.  Cells share the static EnvCfg but evolve their own popularity /
+    location Markov chains from independent initial states."""
+    return jax.vmap(lambda k: env_reset(k, cfg))(keys)
+
+
+def make_user_masks(cfg: EnvCfg, counts) -> jnp.ndarray:
+    """(B, U) float masks for heterogeneous per-cell user counts.
+
+    ``counts[b]`` users are active in cell b (the first ``counts[b]`` of the
+    U slots); inactive users receive zero allocation, contribute nothing to
+    the reward, and are zeroed in the observation.  This is how cells with
+    different populations share one compiled, batched program."""
+    counts = jnp.asarray(counts)
+    return (jnp.arange(cfg.U)[None, :] < counts[:, None]).astype(jnp.float32)
+
+
 def env_advance_frame(state: EnvState, cfg: EnvCfg) -> EnvState:
     """Frame boundary: popularity Markov transition; requests for the first
     slot of the new frame are re-drawn under the new skewness.  The caching
@@ -232,17 +256,27 @@ def slot_metrics(state: EnvState, cfg: EnvCfg, models: ModelParams, b, xi):
             "rate_up": r_up, "rate_dw": r_dw}
 
 
-def slot_reward(metrics, cfg: EnvCfg):
-    """Eq. (23)."""
+def masked_mean(x, mask=None):
+    """Mean over the user axis; with a (U,) 0/1 mask, mean over active
+    users only (safe when no user is active)."""
+    if mask is None:
+        return jnp.mean(x)
+    return jnp.sum(x * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def slot_reward(metrics, cfg: EnvCfg, mask=None):
+    """Eq. (23); with ``mask`` the per-user costs of inactive users are
+    excluded (heterogeneous-population cells, see make_user_masks)."""
     viol = (metrics["d_tl"] > cfg.tau).astype(jnp.float32)
-    return -jnp.mean(metrics["G"] + viol * cfg.chi)
+    return -masked_mean(metrics["G"] + viol * cfg.chi, mask)
 
 
-def env_step_slot(state: EnvState, cfg: EnvCfg, models: ModelParams, b, xi):
+def env_step_slot(state: EnvState, cfg: EnvCfg, models: ModelParams, b, xi,
+                  mask=None):
     """Execute allocation (b, xi) on the current slot, then draw the next
     slot's randomness.  Returns (next_state, reward, metrics)."""
     metrics = slot_metrics(state, cfg, models, b, xi)
-    r = slot_reward(metrics, cfg)
+    r = slot_reward(metrics, cfg, mask)
     k, knext = jax.random.split(state.key)
     nxt = _refresh_slot(k, state._replace(key=knext), cfg)
     return nxt, r, metrics
@@ -250,10 +284,16 @@ def env_step_slot(state: EnvState, cfg: EnvCfg, models: ModelParams, b, xi):
 
 # -- observation (Eq. 21) -------------------------------------------------------
 
-def observe(state: EnvState, cfg: EnvCfg, models: ModelParams):
-    """s_t(k) = {h, phi, rho, d_in, d_op} normalised to O(1) ranges."""
+def observe(state: EnvState, cfg: EnvCfg, models: ModelParams, mask=None):
+    """s_t(k) = {h, phi, rho, d_in, d_op} normalised to O(1) ranges.
+
+    With ``mask``, inactive users' features are zeroed so cells with fewer
+    than U users present a consistent observation to the shared actor."""
     h_n = (jnp.log10(state.h + 1e-30) + 12.0) / 5.0
     req_n = state.req.astype(jnp.float32) / cfg.M
     din_n = state.d_in / (cfg.d_in_mb[1] * MB_BITS)
     dop_n = models.d_op[state.req] / (cfg.d_op_mb[1] * MB_BITS)
+    if mask is not None:
+        h_n, req_n = h_n * mask, req_n * mask
+        din_n, dop_n = din_n * mask, dop_n * mask
     return jnp.concatenate([h_n, req_n, state.rho, din_n, dop_n])

@@ -8,25 +8,37 @@ benchmarks:
   DDPG-based T2DRL  allocator="ddpg",  cacher="ddqn"
   SCHRS             allocator="schrs", cacher="static"
   RCARS             allocator="rcars", cacher="random"
+
+Vectorized training core (DESIGN.md §6): the per-episode logic lives in
+``_episode_core`` (single env, optionally user-masked).  ``run_training``
+vmaps it over a leading batch axis of B independent edge cells — each with
+its own model zoo, replay buffers, agent parameters, and popularity /
+location Markov chains — and scans over episodes, so an entire multi-seed,
+multi-episode run is ONE compiled call.  ``run_episode`` remains the public
+single-env entry point, and B=1 bypasses vmap entirely, so the legacy path
+is reproduced exactly (cell 0 of any batch uses the same keys as a legacy
+single-env run with the same seed).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .baselines import (GACfg, ga_allocate, random_cache, rcars_allocate,
-                        static_popular_cache)
-from .buffers import buffer_add, buffer_init, buffer_sample
+from .baselines import (GACfg, ga_allocate, random_cache, random_cache_batch,
+                        rcars_allocate, static_popular_cache,
+                        static_popular_cache_batch)
+from .buffers import (buffer_add, buffer_add_batch, buffer_init,
+                      buffer_sample, buffer_sample_batch)
 from .d3pg import (D3PGCfg, actor_act, amend_actions, d3pg_init, d3pg_update,
                    make_actor_schedule)
 from .ddqn import DDQNCfg, amend_caching, ddqn_act, ddqn_init, ddqn_update
 from .env import (EnvCfg, EnvState, ModelParams, env_advance_frame,
-                  env_reset, env_set_cache, env_step_slot, make_models,
-                  observe)
+                  env_reset, env_reset_batch, env_set_cache, env_step_slot,
+                  make_models, make_user_masks, masked_mean, observe)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +46,7 @@ class T2DRLCfg:
     env: EnvCfg = EnvCfg()
     allocator: str = "d3pg"     # d3pg | ddpg | schrs | rcars
     cacher: str = "ddqn"        # ddqn | static | random
+    policy: str = "independent"  # vector-env mode: independent | shared
     episodes: int = 500
     warmup: int = 200           # slot transitions before D3PG updates
     eps_start: float = 1.0      # DDQN epsilon-greedy schedule (per episode)
@@ -82,14 +95,62 @@ def t2drl_init(key, cfg: T2DRLCfg):
     }
 
 
+def _batch_keys(key, num_envs: int):
+    """Per-cell keys with the invariant cell0 == ``key``: cell 0 of any
+    batch replays the legacy single-env run for the same seed."""
+    if num_envs == 1:
+        return key[None]
+    return jnp.stack([key] + [jax.random.fold_in(key, i)
+                              for i in range(1, num_envs)])
+
+
+def t2drl_init_batch(key, cfg: T2DRLCfg, num_envs: int, *,
+                     share_models: bool = False):
+    """Train state for B parallel cells as one pytree.  Models and replay
+    buffers always carry a leading (B,) axis; with ``cfg.policy ==
+    "independent"`` the agent parameters do too (B fully independent
+    seeds), while ``"shared"`` keeps ONE set of agent parameters (cell 0's
+    init) learning from all cells' experience.
+
+    Each cell draws its own model zoo (heterogeneous across the batch);
+    ``share_models=True`` broadcasts cell 0's zoo to every cell instead
+    (pure multi-seed variance studies on one scenario)."""
+    if cfg.policy not in ("independent", "shared"):
+        raise ValueError(f"unknown policy {cfg.policy!r}; "
+                         "expected 'independent' or 'shared'")
+    if num_envs < 1:
+        raise ValueError("num_envs must be >= 1")
+    ts = jax.vmap(lambda k: t2drl_init(k, cfg))(_batch_keys(key, num_envs))
+    if share_models:
+        ts["models"] = jax.tree.map(
+            lambda x: jnp.repeat(x[:1], num_envs, axis=0), ts["models"])
+    if cfg.policy == "shared":
+        ts["d3pg"] = jax.tree.map(lambda x: x[0], ts["d3pg"])
+        ts["ddqn"] = jax.tree.map(lambda x: x[0], ts["ddqn"])
+    return ts
+
+
 def episode_epsilon(cfg: T2DRLCfg, episode):
     frac = jnp.clip(episode / max(cfg.eps_decay_episodes, 1), 0.0, 1.0)
     return cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "train"))
-def run_episode(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True):
-    """One episode of Algorithm 1.  Returns (ts, stats)."""
+def episode_sigma(cfg: T2DRLCfg, episode):
+    """Exploration-noise schedule: decays from explore_sigma to 0.02 on the
+    same schedule as epsilon; zero for the non-learned allocators."""
+    if cfg.allocator not in ("d3pg", "ddpg"):
+        return jnp.float32(0.0)
+    d3 = cfg.d3pg_cfg()
+    frac = jnp.clip(episode / max(cfg.eps_decay_episodes, 1), 0.0, 1.0)
+    return (d3.explore_sigma * (1.0 - frac) + 0.02 * frac).astype(jnp.float32)
+
+
+def _episode_core(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
+                  mask=None):
+    """One episode of Algorithm 1 for a single env.  ``mask`` is an optional
+    (U,) 0/1 vector of active users (heterogeneous-population cells); with
+    ``mask=None`` the computation is identical to the pre-vectorization
+    ``run_episode``.  Returns (ts, stats)."""
     env_cfg = cfg.env
     d3 = cfg.d3pg_cfg()
     dq = cfg.ddqn_cfg()
@@ -101,20 +162,20 @@ def run_episode(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True):
     def slot_step(carry, k_slot):
         ts, env = carry
         ks = jax.random.split(k_slot, 4)
-        s = observe(env, env_cfg, models)
+        s = observe(env, env_cfg, models, mask)
         if cfg.allocator in ("d3pg", "ddpg"):
             raw = actor_act(ts["d3pg"]["actor"], d3, sched, s, ks[0])
             raw = jnp.clip(raw + sigma * jax.random.normal(ks[1], raw.shape),
                            0.0, 1.0)
-            b, xi = amend_actions(raw, env.req, env.rho, env_cfg.U)
+            b, xi = amend_actions(raw, env.req, env.rho, env_cfg.U, mask=mask)
         elif cfg.allocator == "schrs":
             b, xi = ga_allocate(ks[0], env, env_cfg, models, cfg.ga)
         else:  # rcars
             b, xi = rcars_allocate(env, env_cfg)
-        env1, r, m = env_step_slot(env, env_cfg, models, b, xi)
+        env1, r, m = env_step_slot(env, env_cfg, models, b, xi, mask)
         new_ts = ts
         if cfg.allocator in ("d3pg", "ddpg"):
-            s1 = observe(env1, env_cfg, models)
+            s1 = observe(env1, env_cfg, models, mask)
             item = {"s": s, "a": jnp.concatenate([b, xi]), "r": r, "s1": s1,
                     "req": env.req, "rho": env.rho, "req1": env1.req,
                     "rho1": env1.rho}
@@ -124,15 +185,16 @@ def run_episode(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True):
                 def do_update(ts_in):
                     batch = buffer_sample(ts_in["ebuf"], ks[2], d3.batch)
                     d3pg_new, _ = d3pg_update(ts_in["d3pg"], d3, sched,
-                                              batch, ks[3])
+                                              batch, ks[3], mask=mask)
                     return {**ts_in, "d3pg": d3pg_new}
                 new_ts = jax.lax.cond(ebuf["size"] > cfg.warmup, do_update,
                                       lambda t: t, new_ts)
-        stats = {"r": r, "hit": jnp.mean(m["cached"]),
-                 "G": jnp.mean(m["G"]),
-                 "delay": jnp.mean(m["d_tl"]),
-                 "quality": jnp.mean(m["quality"]),
-                 "viol": jnp.mean((m["d_tl"] > env_cfg.tau).astype(jnp.float32))}
+        stats = {"r": r, "hit": masked_mean(m["cached"], mask),
+                 "G": masked_mean(m["G"], mask),
+                 "delay": masked_mean(m["d_tl"], mask),
+                 "quality": masked_mean(m["quality"], mask),
+                 "viol": masked_mean(
+                     (m["d_tl"] > env_cfg.tau).astype(jnp.float32), mask)}
         return (new_ts, env1), stats
 
     def frame_step(carry, k_frame):
@@ -195,42 +257,300 @@ def run_episode(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True):
     return ts, stats
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "train"))
+def run_episode(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True):
+    """One episode of Algorithm 1 (single env).  Returns (ts, stats)."""
+    return _episode_core(ts, cfg, key, eps, sigma, train=train)
+
+
+def _batch_mean(x, masks=None):
+    """Per-env mean over the trailing user axis; masks: (B, U) or None."""
+    if masks is None:
+        return jnp.mean(x, axis=-1)
+    return jnp.sum(x * masks, axis=-1) / jnp.maximum(
+        jnp.sum(masks, axis=-1), 1.0)
+
+
+def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
+                         train: bool = True, masks=None):
+    """One episode in shared-learner vector-env mode: B cells roll out in
+    lockstep feeding per-cell replay buffers, and ONE shared policy takes a
+    single optimizer step per slot on a fixed-size minibatch pooled evenly
+    across the cells' buffers.  Per-step learner cost is independent of B —
+    the standard vector-env trade (update:data ratio scales as 1/B).
+    Returns (ts, stats) with per-cell stats of shape (B,)."""
+    env_cfg = cfg.env
+    d3 = cfg.d3pg_cfg()
+    dq = cfg.ddqn_cfg()
+    sched = make_actor_schedule(d3)
+    models: ModelParams = ts["models"]
+    B = keys.shape[0]
+    k_env = jax.vmap(lambda k: jax.random.split(k)[0])(keys)
+    key = jax.random.split(keys[0])[1]     # driver key (frames, updates)
+    env = env_reset_batch(k_env, env_cfg)
+    n_slot = max(1, d3.batch // B)         # per-cell slice of the minibatch
+    n_frame = max(1, dq.batch // B)
+    row_masks = (None if masks is None
+                 else jnp.repeat(masks, n_slot, axis=0))
+
+    def pool(batch_be):
+        """(B, n, ...) per-cell samples -> one (B*n, ...) minibatch."""
+        return jax.tree.map(
+            lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
+            batch_be)
+
+    def slot_step(carry, k_slot):
+        ts, env = carry
+        ks = jax.random.split(k_slot, 4)
+        s = jax.vmap(lambda e, m, mk: observe(e, env_cfg, m, mk))(
+            env, models, masks)                               # (B, S)
+        if cfg.allocator in ("d3pg", "ddpg"):
+            raw = actor_act(ts["d3pg"]["actor"], d3, sched, s, ks[0])
+            raw = jnp.clip(raw + sigma * jax.random.normal(ks[1], raw.shape),
+                           0.0, 1.0)
+            b, xi = amend_actions(raw, env.req, env.rho, env_cfg.U,
+                                  mask=masks)
+        elif cfg.allocator == "schrs":
+            b, xi = jax.vmap(
+                lambda k, e, m: ga_allocate(k, e, env_cfg, m, cfg.ga))(
+                    jax.random.split(ks[0], B), env, models)
+        else:  # rcars
+            b, xi = jax.vmap(lambda e: rcars_allocate(e, env_cfg))(env)
+        env1, r, m = jax.vmap(
+            lambda e, mo, bb, xx, mk: env_step_slot(e, env_cfg, mo, bb, xx,
+                                                    mk))(
+            env, models, b, xi, masks)
+        new_ts = ts
+        if cfg.allocator in ("d3pg", "ddpg"):
+            s1 = jax.vmap(lambda e, mo, mk: observe(e, env_cfg, mo, mk))(
+                env1, models, masks)
+            item = {"s": s, "a": jnp.concatenate([b, xi], axis=-1), "r": r,
+                    "s1": s1, "req": env.req, "rho": env.rho,
+                    "req1": env1.req, "rho1": env1.rho}
+            ebuf = buffer_add_batch(ts["ebuf"], item)
+            new_ts = {**ts, "ebuf": ebuf}
+            if train:
+                def do_update(ts_in):
+                    batch = pool(buffer_sample_batch(
+                        ts_in["ebuf"], jax.random.split(ks[2], B), n_slot))
+                    d3pg_new, _ = d3pg_update(ts_in["d3pg"], d3, sched,
+                                              batch, ks[3], mask=row_masks)
+                    return {**ts_in, "d3pg": d3pg_new}
+                new_ts = jax.lax.cond(
+                    jnp.sum(ebuf["size"]) > cfg.warmup, do_update,
+                    lambda t: t, new_ts)
+        stats = {"r": r, "hit": _batch_mean(m["cached"], masks),
+                 "G": _batch_mean(m["G"], masks),
+                 "delay": _batch_mean(m["d_tl"], masks),
+                 "quality": _batch_mean(m["quality"], masks),
+                 "viol": _batch_mean(
+                     (m["d_tl"] > env_cfg.tau).astype(jnp.float32), masks)}
+        return (new_ts, env1), stats
+
+    def frame_step(carry, k_frame):
+        ts, env = carry
+        kf = jax.random.split(k_frame, 3)
+        env = jax.vmap(lambda e: env_advance_frame(e, env_cfg))(env)
+        gamma_t = env.gamma_idx                               # (B,)
+        if cfg.cacher == "ddqn":
+            a_int = ddqn_act(ts["ddqn"], dq, gamma_t, kf[0], eps)
+            rho = jax.vmap(
+                lambda a, c: amend_caching(a, dq, c, env_cfg.C))(
+                    a_int, models.c)                          # (B, M)
+        elif cfg.cacher == "static":
+            a_int = jnp.zeros((B,), jnp.int32)
+            rho = static_popular_cache_batch(models, env_cfg)
+        else:  # random
+            a_int = jnp.zeros((B,), jnp.int32)
+            rho = random_cache_batch(jax.random.split(kf[0], B), models,
+                                     env_cfg)
+        env = jax.vmap(env_set_cache)(env, rho)
+        (ts, env), slot_stats = jax.lax.scan(
+            slot_step, (ts, env), jax.random.split(kf[1], env_cfg.K))
+        storage_viol = (jnp.sum(rho * models.c, axis=-1)
+                        > env_cfg.C).astype(jnp.float32)      # (B,)
+        r_frame = jnp.mean(slot_stats["r"], axis=0) - storage_viol * env_cfg.Xi
+        out = {"gamma": gamma_t, "a_int": a_int, "r_frame": r_frame,
+               "slot": slot_stats, "storage_viol": storage_viol}
+        return (ts, env), out
+
+    (ts, env), frames = jax.lax.scan(
+        frame_step, (ts, env), jax.random.split(key, env_cfg.T))
+
+    if cfg.cacher == "ddqn" and train:
+        def add_and_update(ts, t):
+            item = {"s": frames["gamma"][t], "a": frames["a_int"][t],
+                    "r": frames["r_frame"][t], "s1": frames["gamma"][t + 1]}
+            fbuf = buffer_add_batch(ts["fbuf"], item)
+            ts = {**ts, "fbuf": fbuf}
+            def do_update(ts_in):
+                kb = jax.random.fold_in(key, t)
+                batch = pool(buffer_sample_batch(
+                    ts_in["fbuf"], jax.random.split(kb, B), n_frame))
+                ddqn_new, _ = ddqn_update(ts_in["ddqn"], dq, batch)
+                return {**ts_in, "ddqn": ddqn_new}
+            ts = jax.lax.cond(jnp.sum(fbuf["size"]) > dq.batch, do_update,
+                              lambda t_: t_, ts)
+            return ts, None
+        ts, _ = jax.lax.scan(add_and_update, ts,
+                             jnp.arange(env_cfg.T - 1))
+
+    slot = frames["slot"]                  # leaves (T, K, B)
+    stats = {
+        "episode_reward": jnp.sum(slot["r"], axis=(0, 1)),
+        "mean_reward": jnp.mean(slot["r"], axis=(0, 1)),
+        "hit_ratio": jnp.mean(slot["hit"], axis=(0, 1)),
+        "utility": jnp.mean(slot["G"], axis=(0, 1)),
+        "delay": jnp.mean(slot["delay"], axis=(0, 1)),
+        "quality": jnp.mean(slot["quality"], axis=(0, 1)),
+        "deadline_viol": jnp.mean(slot["viol"], axis=(0, 1)),
+        "storage_viol": jnp.mean(frames["storage_viol"], axis=0),
+    }
+    return ts, stats
+
+
+def _episode_batch(ts, cfg: T2DRLCfg, keys, eps, sigma, *, train: bool,
+                   masks=None):
+    """One episode across the batch; keys: (B,) per-cell episode keys.
+
+    ``cfg.policy == "independent"`` vmaps the single-env episode (B
+    independent learners); B=1 bypasses vmap so the single-env program (and
+    its cond-based update gating) is preserved exactly.  ``"shared"``
+    delegates to the shared-learner lockstep core."""
+    if cfg.policy == "shared":
+        return _episode_core_shared(ts, cfg, keys, eps, sigma, train=train,
+                                    masks=masks)
+    B = keys.shape[0]
+    if B == 1:
+        mask = None if masks is None else masks[0]
+        ts1, stats = _episode_core(
+            jax.tree.map(lambda x: x[0], ts), cfg, keys[0], eps, sigma,
+            train=train, mask=mask)
+        expand = functools.partial(jax.tree.map, lambda x: x[None])
+        return expand(ts1), expand(stats)
+    return jax.vmap(
+        lambda t, k, m: _episode_core(t, cfg, k, eps, sigma, train=train,
+                                      mask=m))(ts, keys, masks)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "train"))
+def run_training(ts, cfg: T2DRLCfg, key, ep_idx, masks=None, *,
+                 train: bool = True):
+    """Scan ``_episode_batch`` over the (absolute) episode indices
+    ``ep_idx`` — a whole multi-episode, multi-cell run in one compiled call.
+    Epsilon/sigma schedules are traced functions of the episode index.
+    Returns (ts, history) with history leaves of shape (len(ep_idx), B)."""
+    B = ts["models"].a1.shape[0]
+
+    def ep_step(ts, ep):
+        k_ep = jax.random.fold_in(key, ep)
+        e = ep.astype(jnp.float32)
+        eps = episode_epsilon(cfg, e)
+        sigma = episode_sigma(cfg, e)
+        return _episode_batch(ts, cfg, _batch_keys(k_ep, B), eps, sigma,
+                              train=train, masks=masks)
+
+    return jax.lax.scan(ep_step, ts, ep_idx)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def run_eval(ts, cfg: T2DRLCfg, key, ep_idx, masks=None):
+    """Greedy evaluation scan: eps = sigma = 0, no updates, ``ts`` is not
+    threaded between episodes.  Returns history leaves (len(ep_idx), B)."""
+    B = ts["models"].a1.shape[0]
+    zero = jnp.float32(0.0)
+
+    def ep_step(_, ep):
+        k_ep = jax.random.fold_in(key, ep)
+        _, stats = _episode_batch(ts, cfg, _batch_keys(k_ep, B), zero, zero,
+                                  train=False, masks=masks)
+        return None, stats
+
+    _, stats = jax.lax.scan(ep_step, None, ep_idx)
+    return stats
+
+
+_ENV_AXIS_KEYS = ("models", "ebuf", "fbuf")   # always batched in batch mode
+
+
+def _squeeze_env_axis(ts, cfg: T2DRLCfg):
+    """Drop the leading B=1 axis, giving a legacy-shaped train state.  In
+    shared-policy mode the agent parameters never had an env axis."""
+    keys = (_ENV_AXIS_KEYS if cfg.policy == "shared" else ts.keys())
+    return {k: (jax.tree.map(lambda x: x[0], v) if k in keys else v)
+            for k, v in ts.items()}
+
+
+def _expand_env_axis(ts, cfg: T2DRLCfg):
+    keys = (_ENV_AXIS_KEYS if cfg.policy == "shared" else ts.keys())
+    return {k: (jax.tree.map(lambda x: x[None], v) if k in keys else v)
+            for k, v in ts.items()}
+
+
 def train_t2drl(cfg: T2DRLCfg, *, episodes: Optional[int] = None,
-                log_every: int = 0, callback=None):
-    """Full training run.  Returns (train_state, history dict of arrays)."""
+                num_envs: int = 1, user_counts: Optional[Sequence[int]] = None,
+                share_models: bool = False, log_every: int = 0,
+                callback=None):
+    """Full training run over ``num_envs`` parallel edge cells (multi-seed).
+
+    Returns (train_state, history dict of stacked arrays).  History leaves
+    have shape (episodes,) for num_envs=1 (legacy layout) and
+    (episodes, num_envs) otherwise; likewise the train state keeps its
+    leading batch axis only for num_envs > 1.
+
+    ``user_counts`` (len num_envs) activates heterogeneous per-cell user
+    populations via masking; ``share_models`` broadcasts one model zoo to
+    every cell.  With ``log_every``/``callback`` the episode scan runs in
+    chunks (keys are derived from absolute episode indices, so chunking
+    never changes the results)."""
     episodes = episodes or cfg.episodes
     key = jax.random.PRNGKey(cfg.seed)
     k_init, key = jax.random.split(key)
-    ts = t2drl_init(k_init, cfg)
-    hist = []
-    d3 = cfg.d3pg_cfg()
-    for ep in range(episodes):
-        k_ep = jax.random.fold_in(key, ep)
-        eps = episode_epsilon(cfg, jnp.float32(ep))
-        # exploration noise decays on the same schedule as epsilon
-        frac = min(ep / max(cfg.eps_decay_episodes, 1), 1.0)
-        sigma = jnp.float32(
-            (d3.explore_sigma * (1.0 - frac) + 0.02 * frac)
-            if cfg.allocator in ("d3pg", "ddpg") else 0.0)
-        ts, stats = run_episode(ts, cfg, k_ep, eps, sigma, train=True)
-        hist.append(stats)
-        if log_every and (ep + 1) % log_every == 0:
-            print(f"ep {ep + 1:4d} reward {float(stats['episode_reward']):9.2f} "
-                  f"hit {float(stats['hit_ratio']):.3f} "
-                  f"G {float(stats['utility']):7.2f}")
+    ts = t2drl_init_batch(k_init, cfg, num_envs, share_models=share_models)
+    masks = None
+    if user_counts is not None:
+        if len(user_counts) != num_envs:
+            raise ValueError("user_counts must have one entry per env")
+        masks = make_user_masks(cfg.env, user_counts)
+    chunk = episodes if not (log_every or callback) else (log_every or 1)
+    chunks, ep0 = [], 0
+    while ep0 < episodes:
+        n = min(chunk, episodes - ep0)
+        ts, stats = run_training(ts, cfg, key, jnp.arange(ep0, ep0 + n),
+                                 masks, train=True)
+        chunks.append(stats)
+        if log_every:
+            last = {k: float(jnp.mean(v[-1])) for k, v in stats.items()}
+            print(f"ep {ep0 + n:4d} reward {last['episode_reward']:9.2f} "
+                  f"hit {last['hit_ratio']:.3f} "
+                  f"G {last['utility']:7.2f}")
         if callback is not None:
-            callback(ep, stats)
-    history = {k: jnp.stack([h[k] for h in hist]) for k in hist[0]}
+            for i in range(n):
+                callback(ep0 + i,
+                         jax.tree.map(lambda x: jnp.mean(x[i]), stats))
+        ep0 += n
+    history = {k: jnp.concatenate([c[k] for c in chunks])
+               for k in chunks[0]}
+    if num_envs == 1:
+        ts = _squeeze_env_axis(ts, cfg)
+        history = {k: v[:, 0] for k, v in history.items()}
     return ts, history
 
 
-def eval_t2drl(ts, cfg: T2DRLCfg, *, episodes: int = 10, seed: int = 10_000):
-    """Greedy evaluation (no exploration, no updates)."""
-    key = jax.random.PRNGKey(seed)
-    out = []
-    for ep in range(episodes):
-        k_ep = jax.random.fold_in(key, ep)
-        _, stats = run_episode(ts, cfg, k_ep, jnp.float32(0.0),
-                               jnp.float32(0.0), train=False)
-        out.append(stats)
-    return {k: jnp.mean(jnp.stack([o[k] for o in out])) for k in out[0]}
+def eval_t2drl(ts, cfg: T2DRLCfg, *, episodes: int = 10, seed: int = 10_000,
+               user_counts: Optional[Sequence[int]] = None):
+    """Greedy evaluation (no exploration, no updates).  Accepts a single
+    train state or a batched one (leading (B,) axis, as returned by
+    ``train_t2drl(..., num_envs=B)``); returns scalar means over episodes
+    and cells."""
+    batched = ts["models"].a1.ndim == 2
+    if not batched:
+        ts = _expand_env_axis(ts, cfg)
+    masks = None
+    if user_counts is not None:
+        if len(user_counts) != ts["models"].a1.shape[0]:
+            raise ValueError("user_counts must have one entry per env")
+        masks = make_user_masks(cfg.env, user_counts)
+    stats = run_eval(ts, cfg, jax.random.PRNGKey(seed),
+                     jnp.arange(episodes), masks)
+    return {k: jnp.mean(v) for k, v in stats.items()}

@@ -1,0 +1,188 @@
+"""Vectorized training core (DESIGN.md §6): B=1 equivalence with the legacy
+single-env episode loop, per-env replay-buffer wraparound under the leading
+batch axis, multi-cell training in both vector-env modes, masked
+heterogeneous user counts, and batched agent primitives."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DDQNCfg, EnvCfg, T2DRLCfg, amend_actions,
+                        amend_caching, ddqn_act, ddqn_init, episode_epsilon,
+                        episode_sigma, eval_t2drl, make_user_masks,
+                        run_episode, t2drl_init, t2drl_init_batch,
+                        train_t2drl)
+from repro.core.buffers import (buffer_add, buffer_add_batch,
+                                buffer_init_batch, buffer_sample_batch)
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = T2DRLCfg(env=EnvCfg(U=4, M=4, T=3, K=3), warmup=5,
+               lr_actor=1e-4, lr_critic=1e-4, lr_ddqn=1e-3, L=2,
+               eps_decay_episodes=4, seed=0)
+
+
+# -- B=1 equivalence with the legacy path -------------------------------------
+
+def _legacy_train(cfg, episodes):
+    """The pre-refactor train_t2drl loop: python `for` over episodes driving
+    the (still public) single-env run_episode."""
+    key = jax.random.PRNGKey(cfg.seed)
+    k_init, key = jax.random.split(key)
+    ts = t2drl_init(k_init, cfg)
+    hist = []
+    for ep in range(episodes):
+        k_ep = jax.random.fold_in(key, ep)
+        e = jnp.float32(ep)
+        ts, stats = run_episode(ts, cfg, k_ep, episode_epsilon(cfg, e),
+                                episode_sigma(cfg, e), train=True)
+        hist.append(stats)
+    return ts, {k: jnp.stack([h[k] for h in hist]) for k in hist[0]}
+
+
+def test_vectorized_b1_matches_legacy_run_episode():
+    ts_old, hist_old = _legacy_train(CFG, 3)
+    ts_new, hist_new = train_t2drl(CFG, episodes=3, num_envs=1)
+    for k in hist_old:
+        np.testing.assert_allclose(np.asarray(hist_old[k]),
+                                   np.asarray(hist_new[k]),
+                                   rtol=1e-5, atol=1e-7, err_msg=k)
+    # the train states agree too (buffers, agent params, model zoo)
+    assert int(ts_new["ebuf"]["size"]) == int(ts_old["ebuf"]["size"])
+    for a, b in zip(jax.tree.leaves(ts_old["d3pg"]),
+                    jax.tree.leaves(ts_new["d3pg"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_vectorized_b1_history_keeps_legacy_layout():
+    _, hist = train_t2drl(CFG, episodes=2, num_envs=1)
+    assert np.asarray(hist["episode_reward"]).shape == (2,)
+
+
+# -- per-env buffers under the leading batch axis -----------------------------
+
+def test_batched_buffer_per_env_wraparound_and_sampling():
+    B, cap = 3, 4
+    buf = buffer_init_batch(B, cap, {"x": jnp.zeros(2), "y": jnp.int32(0)})
+    # env b receives items 100*b + i; env 2 receives 2 extra (wraps earlier)
+    for i in range(cap + 2):
+        item = {"x": jnp.stack([jnp.full(2, 100.0 * b + i) for b in range(B)]),
+                "y": (100 * jnp.arange(B) + i).astype(jnp.int32)}
+        if i < cap:
+            buf = buffer_add_batch(buf, item)
+        else:
+            # uneven write rates: single-env adds keep envs 0/1 untouched
+            b2 = jax.tree.map(lambda x: x[2], buf)
+            b2 = buffer_add(b2, jax.tree.map(lambda x: x[2], item))
+            buf = jax.tree.map(lambda full, one: full.at[2].set(one), buf, b2)
+    assert buf["size"].tolist() == [cap, cap, cap]
+    assert buf["ptr"].tolist() == [0, 0, 2]     # env 2 wrapped 2 further
+    ys = np.asarray(buf["data"]["y"])
+    assert set(ys[0].tolist()) == {0, 1, 2, 3}
+    assert set(ys[1].tolist()) == {100, 101, 102, 103}
+    # env 2's two oldest entries were overwritten by the wrapped writes
+    assert set(ys[2].tolist()) == {204, 205, 202, 203}
+    batch = buffer_sample_batch(buf, jax.random.split(KEY, B), 16)
+    assert batch["x"].shape == (B, 16, 2)
+    for b in range(B):
+        assert set(np.asarray(batch["y"][b]).tolist()) <= set(ys[b].tolist())
+
+
+# -- multi-cell training ------------------------------------------------------
+
+def test_independent_mode_trains_b_parallel_envs():
+    ts, hist = train_t2drl(CFG, episodes=2, num_envs=3)
+    r = np.asarray(hist["episode_reward"])
+    assert r.shape == (2, 3)
+    assert np.all(np.isfinite(r))
+    # heterogeneous cells: independent model zoos and trajectories
+    assert not np.allclose(r[:, 0], r[:, 1])
+    assert not np.allclose(np.asarray(ts["models"].a1[0]),
+                           np.asarray(ts["models"].a1[1]))
+    # cell 0 replays the legacy key stream: first episode (pre-update
+    # divergence from batched-matmul reduction order) matches B=1 exactly
+    _, h1 = train_t2drl(CFG, episodes=1, num_envs=1)
+    np.testing.assert_allclose(r[0, 0], np.asarray(h1["episode_reward"])[0],
+                               rtol=1e-5)
+    ev = eval_t2drl(ts, CFG, episodes=2)
+    assert np.isfinite(float(ev["episode_reward"]))
+
+
+def test_shared_mode_single_learner_all_cells():
+    cfg = dataclasses.replace(CFG, policy="shared")
+    ts, hist = train_t2drl(cfg, episodes=2, num_envs=3)
+    r = np.asarray(hist["episode_reward"])
+    assert r.shape == (2, 3)
+    assert np.all(np.isfinite(r))
+    # ONE set of agent parameters (no leading env axis) ...
+    ref = t2drl_init(KEY, cfg)
+    for a, b in zip(jax.tree.leaves(ts["d3pg"]),
+                    jax.tree.leaves(ref["d3pg"])):
+        assert a.shape == b.shape
+    # ... but per-cell buffers and model zoos
+    assert ts["ebuf"]["size"].shape == (3,)
+    assert int(jnp.sum(ts["ebuf"]["size"])) == 2 * 3 * 3 * 3  # eps*T*K*B
+    ev = eval_t2drl(ts, cfg, episodes=2)
+    assert np.isfinite(float(ev["episode_reward"]))
+
+
+def test_shared_mode_b1_roundtrip_keeps_legacy_layout():
+    cfg = dataclasses.replace(CFG, policy="shared")
+    ts, hist = train_t2drl(cfg, episodes=2, num_envs=1)
+    assert np.asarray(hist["episode_reward"]).shape == (2,)
+    assert ts["models"].a1.ndim == 1            # squeezed back
+    ev = eval_t2drl(ts, cfg, episodes=2)        # re-expands internally
+    assert np.isfinite(float(ev["episode_reward"]))
+
+
+def test_share_models_broadcasts_one_zoo():
+    ts = t2drl_init_batch(KEY, CFG, 3, share_models=True)
+    a1 = np.asarray(ts["models"].a1)
+    assert a1.shape[0] == 3
+    np.testing.assert_array_equal(a1[0], a1[1])
+    np.testing.assert_array_equal(a1[0], a1[2])
+
+
+# -- heterogeneous user counts via masking ------------------------------------
+
+def test_user_masks_zero_inactive_allocation():
+    env = CFG.env
+    masks = make_user_masks(env, (4, 2, 1))
+    assert masks.shape == (3, env.U)
+    np.testing.assert_array_equal(masks[1], [1, 1, 0, 0])
+    raw = jax.random.uniform(KEY, (2 * env.U,))
+    req = jnp.zeros((env.U,), jnp.int32)
+    rho = jnp.ones((env.M,))
+    b, xi = amend_actions(raw, req, rho, env.U, mask=masks[1])
+    assert float(jnp.max(b[2:])) == 0.0 and float(jnp.max(xi[2:])) == 0.0
+    assert abs(float(jnp.sum(b)) - 1.0) < 1e-4
+    assert abs(float(jnp.sum(xi)) - 1.0) < 1e-4
+
+
+def test_training_with_heterogeneous_user_counts():
+    for policy in ("independent", "shared"):
+        cfg = dataclasses.replace(CFG, policy=policy)
+        _, hist = train_t2drl(cfg, episodes=2, num_envs=3,
+                              user_counts=(4, 3, 2))
+        assert np.all(np.isfinite(np.asarray(hist["episode_reward"])))
+
+
+# -- batched agent primitives -------------------------------------------------
+
+def test_ddqn_act_and_amender_are_batch_safe():
+    cfg = DDQNCfg(M=4, J=3)
+    params = ddqn_init(KEY, cfg)
+    gammas = jnp.array([0, 1, 2, 0], jnp.int32)
+    a = ddqn_act(params, cfg, gammas, KEY, jnp.float32(0.0))
+    assert a.shape == (4,)
+    # batched greedy decisions equal the per-element ones
+    for i in range(4):
+        ai = ddqn_act(params, cfg, gammas[i], KEY, jnp.float32(0.0))
+        assert int(a[i]) == int(ai)
+    rho = amend_caching(a, cfg)
+    assert rho.shape == (4, cfg.M)
+    for i in range(4):
+        np.testing.assert_array_equal(np.asarray(rho[i]),
+                                      np.asarray(amend_caching(a[i], cfg)))
