@@ -1,0 +1,120 @@
+"""Scenario × method evaluation harness (ROADMAP: "open a new workload").
+
+Sweeps registered workload scenarios (repro.scenarios) against the method
+suite through the vectorized training core and emits per-scenario
+reward / quality / latency breakdowns as JSON.  Both the learned policies
+(T2DRL, DDPG) and the non-learning baselines (RCARS, SCHRS) face the
+identical modulated workload, so per-scenario deltas measure policy
+adaptation, not workload luck.
+
+  PYTHONPATH=src python -m benchmarks.bench_scenarios \
+      --scenarios all --methods t2drl,rcars --num-envs 4
+
+Output schema (experiments/bench/scenarios.json):
+
+  {"episodes": E, "num_envs": B, "policy": "shared",
+   "scenarios": {<scenario>: {
+      "summary": str,
+      "user_counts": [..] | null,
+      "methods": {<method>: {
+         "mean_reward": float, "episode_reward": float,
+         "quality": float, "delay": float, "hit_ratio": float,
+         "deadline_viol": float, "storage_viol": float, "utility": float,
+         "train_s": float, "final_reward_mean_last10": float | null}}}}}
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import EnvCfg
+from repro.scenarios import build_scenario, list_scenarios
+
+from .common import save_json, train_and_eval
+
+METHODS = ("t2drl", "ddpg", "schrs", "rcars")
+
+
+def resolve_scenarios(names) -> list:
+    """Expand 'all' and validate scenario names against the registry."""
+    reg = list_scenarios()
+    if names in ("all", ("all",), ["all"]):
+        return sorted(reg)
+    names = list(names)
+    for n in names:
+        if n not in reg:
+            raise SystemExit(f"unknown scenario {n!r}; registered: "
+                             f"{', '.join(sorted(reg))}")
+    return names
+
+
+def run(scenarios=("all",), methods=("t2drl", "rcars"), episodes: int = 25,
+        eval_episodes: int = 5, num_envs: int = 2, seed: int = 0,
+        policy: str = "shared", env: EnvCfg | None = None,
+        out_name: str = "scenarios.json", verbose: bool = True):
+    """Sweep scenarios × methods; returns (and saves) the breakdown dict."""
+    env = env or EnvCfg()
+    scenarios = resolve_scenarios(scenarios)
+    for method in methods:
+        if method not in METHODS:
+            raise SystemExit(f"unknown method {method!r}; "
+                             f"expected one of {METHODS}")
+    reg = list_scenarios()
+    out = {"episodes": episodes, "num_envs": num_envs, "policy": policy,
+           "eval_episodes": eval_episodes, "scenarios": {}}
+    for name in scenarios:
+        b = build_scenario(name, env, num_envs)
+        row = {"summary": reg[name],
+               "user_counts": (None if b.user_counts is None
+                               else list(b.user_counts)),
+               "methods": {}}
+        for method in methods:
+            hist, ev = train_and_eval(
+                method, env=b.env, episodes=episodes,
+                eval_episodes=eval_episodes, seed=seed, num_envs=num_envs,
+                mods=b.mods, user_counts=b.user_counts, policy=policy)
+            if hist is not None:
+                r = np.asarray(hist["episode_reward"])
+                ev["final_reward_mean_last10"] = float(r[-10:].mean())
+            else:
+                ev["final_reward_mean_last10"] = None
+            row["methods"][method] = ev
+            if verbose:
+                print(f"{name:17s} {method:6s}: "
+                      f"reward {ev['mean_reward']:8.2f} "
+                      f"hit {ev['hit_ratio']:.3f} "
+                      f"delay {ev['delay']:7.2f} "
+                      f"quality {ev['quality']:6.2f} "
+                      f"viol {ev['deadline_viol']:.3f} "
+                      f"[{ev['train_s']}s]", flush=True)
+        out["scenarios"][name] = row
+    path = save_json(out_name, out)
+    if verbose:
+        print(f"wrote {path}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--scenarios", default="all",
+                    help="comma list of registry names, or 'all'")
+    ap.add_argument("--methods", default="t2drl,rcars",
+                    help=f"comma list from {METHODS}")
+    ap.add_argument("--episodes", type=int, default=25)
+    ap.add_argument("--eval-episodes", type=int, default=5)
+    ap.add_argument("--num-envs", type=int, default=2,
+                    help="parallel cells per scenario")
+    ap.add_argument("--policy", default="shared",
+                    choices=("independent", "shared"),
+                    help="vector-env mode for the learned methods")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(scenarios=args.scenarios.split(","),
+        methods=args.methods.split(","), episodes=args.episodes,
+        eval_episodes=args.eval_episodes, num_envs=args.num_envs,
+        seed=args.seed, policy=args.policy)
+
+
+if __name__ == "__main__":
+    main()

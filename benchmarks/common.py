@@ -39,16 +39,22 @@ def method_cfg(method: str, *, env: EnvCfg, episodes: int,
 
 def train_and_eval(method: str, *, env: EnvCfg, episodes: int,
                    eval_episodes: int = 5, L: int = 5, seed: int = 0,
-                   num_envs: int = 1, **overrides):
+                   num_envs: int = 1, mods=None, user_counts=None,
+                   **overrides):
     """Train (if learning-based) then greedy-eval.  Returns (history, eval).
 
     ``num_envs`` trains B parallel cells through the vectorized core
-    (history leaves gain a trailing (B,) axis); eval means over cells."""
+    (history leaves gain a trailing (B,) axis); eval means over cells.
+    ``mods``/``user_counts`` run a scenario (see ``repro.scenarios`` —
+    pass ``build_scenario(...).mods`` / ``.user_counts`` together with its
+    transformed ``.env``); both the learned methods and the SCHRS/RCARS
+    baselines then face the identical modulated workload."""
     cfg = method_cfg(method, env=env, episodes=episodes, L=L, seed=seed,
                      **overrides)
     t0 = time.time()
     if method in ("t2drl", "ddpg"):
-        ts, hist = train_t2drl(cfg, episodes=episodes, num_envs=num_envs)
+        ts, hist = train_t2drl(cfg, episodes=episodes, num_envs=num_envs,
+                               mods=mods, user_counts=user_counts)
     else:
         # same init-key derivation as train_t2drl, so the non-learning
         # baselines run on the SAME model zoos as the learning methods
@@ -57,7 +63,8 @@ def train_and_eval(method: str, *, env: EnvCfg, episodes: int,
         ts = (t2drl_init(k_init, cfg) if num_envs == 1
               else t2drl_init_batch(k_init, cfg, num_envs))
         hist = None
-    ev = eval_t2drl(ts, cfg, episodes=eval_episodes)
+    ev = eval_t2drl(ts, cfg, episodes=eval_episodes, mods=mods,
+                    user_counts=user_counts)
     ev = {k: float(v) for k, v in ev.items()}
     ev["train_s"] = round(time.time() - t0, 1)
     return hist, ev

@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: convergence,users,cache,runtime,"
-                         "roofline")
+                         "roofline,scenarios")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     episodes = 500 if args.full else 60
@@ -51,6 +51,11 @@ def main() -> None:
         bench_cache.run(capacities=(20.0, 26.0, 32.0) if not args.full
                         else (20.0, 23.0, 26.0, 29.0, 32.0),
                         episodes=episodes)
+    if want("scenarios"):
+        print("\n== scenario registry: workloads x methods ==", flush=True)
+        from . import bench_scenarios
+        bench_scenarios.run(episodes=episodes, num_envs=2 if not args.full
+                            else 4)
     print(f"\nall benchmarks done in {time.time() - t0:.0f}s "
           f"(results in experiments/bench/)")
 

@@ -47,3 +47,14 @@ print(f"\nRCARS baseline  : hit {float(ev_r['hit_ratio']):.3f} "
 print(f"T2DRL           : hit {float(ev['hit_ratio']):.3f} "
       f"reward {float(ev['mean_reward']):.2f}  "
       "(objective: higher reward = lower delay+quality cost w/ deadlines)")
+
+# 5. stress the trained policy on a registered workload scenario (flash
+#    crowds pile most users onto one hot model every few slots — see
+#    README.md "Scenario registry" and DESIGN.md §9).  The schedule only
+#    modulates the env's draws, so the SAME train state and compiled eval
+#    run it directly.
+from repro.scenarios import build_scenario
+burst = build_scenario("flash-crowd", cfg.env, num_envs=4)
+ev_b = eval_t2drl(ts, cfg, episodes=5, mods=burst.mods)
+print(f"\nT2DRL under flash-crowd bursts: hit {float(ev_b['hit_ratio']):.3f} "
+      f"reward {float(ev_b['mean_reward']):.2f}")

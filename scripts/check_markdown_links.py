@@ -1,0 +1,78 @@
+"""Fail on broken intra-repo markdown links (CI docs job).
+
+  python scripts/check_markdown_links.py [paths...]
+
+Scans the given markdown files (default: every tracked/on-disk *.md
+outside ignored dirs) for inline links/images ``[text](target)`` and
+reference definitions ``[ref]: target``.  Relative targets must exist on
+disk (anchors are stripped; ``#section`` anchors within the same file and
+external ``http(s)/mailto`` targets are not checked).  Exit code 1 lists
+every broken link as ``file:line: target``.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".hypothesis",
+             "experiments", "node_modules"}
+# inline [text](target) — target up to the first unescaped ')' or space;
+# images ![alt](target) match too via the optional bang.
+INLINE = re.compile(r"!?\[[^\]\[]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\s{0,3}\[[^\]]+\]:\s+(\S+)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for fn in filenames:
+            if fn.endswith(".md"):
+                yield os.path.join(dirpath, fn)
+
+
+def check_file(path: str, root: str) -> list:
+    broken = []
+    with open(path, encoding="utf-8") as f:
+        in_code = False
+        for lineno, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+            if in_code:
+                continue
+            targets = INLINE.findall(line)
+            m = REFDEF.match(line)
+            if m:
+                targets.append(m.group(1))
+            for t in targets:
+                t = t.strip("<>")
+                if t.startswith(EXTERNAL) or t.startswith("#") or not t:
+                    continue
+                rel = t.split("#", 1)[0]
+                if not rel:
+                    continue
+                base = root if rel.startswith("/") else os.path.dirname(path)
+                if not os.path.exists(os.path.join(base, rel.lstrip("/"))):
+                    broken.append((path, lineno, t))
+    return broken
+
+
+def main(argv) -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    paths = argv or sorted(md_files(root))
+    broken = []
+    for p in paths:
+        broken += check_file(p, root)
+    for path, lineno, target in broken:
+        print(f"{os.path.relpath(path, root)}:{lineno}: broken link "
+              f"-> {target}")
+    if broken:
+        print(f"\n{len(broken)} broken intra-repo link(s)")
+        return 1
+    print(f"checked {len(paths)} markdown file(s): all intra-repo links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -2,10 +2,11 @@
 allocation for edge AIGC services (environment, D3PG, DDQN, baselines,
 T2DRL driver) — with a vectorized, fully-jitted multi-cell training core
 (DESIGN.md §6)."""
-from .env import (EnvCfg, EnvState, ModelParams, env_reset,  # noqa: F401
-                  env_new_frame, env_reset_batch, env_step_slot,
-                  make_models, make_models_batch, make_user_masks,
-                  masked_mean, observe, slot_metrics, slot_reward)
+from .env import (EnvCfg, EnvState, ModelParams, ScenarioSchedule,  # noqa: F401
+                  SlotMod, env_reset, env_new_frame, env_reset_batch,
+                  env_step_slot, make_models, make_models_batch,
+                  make_user_masks, masked_mean, observe, schedule_frame_P,
+                  schedule_slot_mod, slot_metrics, slot_reward)
 from .quality import tv_quality, gen_delay  # noqa: F401
 from .ddqn import (DDQNCfg, amend_caching, ddqn_act, ddqn_init,  # noqa: F401
                    ddqn_init_batch, ddqn_update, ddqn_update_batch)

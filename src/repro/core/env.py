@@ -23,6 +23,43 @@ MB_BITS = 8e6  # bits per MB
 
 @dataclasses.dataclass(frozen=True)
 class EnvCfg:
+    """Static environment configuration (paper Table 2), hashable → jit-static.
+
+    Scenario transforms produce new ``EnvCfg`` instances via
+    ``dataclasses.replace``; anything *time-varying* instead lives in a
+    ``ScenarioSchedule`` consumed at draw time (DESIGN.md §9).
+
+    Attributes
+    ----------
+    U, M : int
+        Number of users / GenAI model types in the cell.
+    T, K : int
+        Frames per episode (long timescale) and slots per frame (short).
+    tau : float
+        Slot duration in seconds — also the service deadline (11h).
+    L_steps : float
+        Total denoising steps available at the BS per slot.
+    C : float
+        BS model-cache capacity (GB), constraint (11d).
+    W_up, W_dw : float
+        Shared uplink / per-user downlink bandwidth (Hz).
+    p_user_dbm, p_bs_dbm, n0_dbm_hz : float
+        Transmit powers and noise PSD (dBm / dBm/Hz).
+    r_bc, r_cb : float
+        BS↔cloud backhaul rates (bps) for uncached requests.
+    d_in_mb, d_op_mb : tuple of float
+        Uniform ranges for input/output sizes (MB).
+    alpha, chi, Xi : float
+        Delay-vs-quality weight (10), deadline penalty (23), storage
+        penalty (32).
+    area : float
+        Cell square side (m); the BS sits at the center.
+    gammas : tuple of float
+        Zipf skewness values of the J popularity states.
+    P_gamma, P_lambda : tuple of tuple of float
+        Markov transition matrices for popularity (37) and user-location
+        distribution (36).
+    """
     U: int = 10                 # users
     M: int = 10                 # GenAI model types
     T: int = 10                 # frames per episode
@@ -112,6 +149,73 @@ class EnvState(NamedTuple):
     rho: jnp.ndarray          # (M,) float 0/1 caching decision
 
 
+# -- scenario modulation (DESIGN.md §9) ---------------------------------------
+#
+# A scenario supplies time-varying modulation of the env's draw distributions
+# as a ScenarioSchedule: precomputed arrays indexed by frame t (``P_gamma``)
+# or by the global slot index g = t*K + k (the per-slot leaves).  The env
+# consumes one SlotMod slice per draw.  ``mod=None`` everywhere takes the
+# unmodulated code path — the PRNG stream and arithmetic are byte-identical
+# to the paper-default env, which is what pins the ``paper-default``
+# scenario (tests/test_scenarios.py).
+
+
+class SlotMod(NamedTuple):
+    """Per-slot modulation consumed by the env at draw time.
+
+    All leaves are scalars (or ``(B,)`` under a leading cell batch):
+    ``h_scale`` multiplies the drawn channel gains, ``din_scale`` the drawn
+    input sizes, and with probability ``burst_prob`` each user's Zipf draw
+    is redirected to the flash-crowd model ``burst_model``.
+    """
+    h_scale: jnp.ndarray      # () channel-gain multiplier
+    din_scale: jnp.ndarray    # () input-size multiplier
+    burst_prob: jnp.ndarray   # () per-user redirect probability
+    burst_model: jnp.ndarray  # () int32 flash-crowd model id
+
+
+class ScenarioSchedule(NamedTuple):
+    """One episode worth of modulation, fully precomputed (jit/scan-safe).
+
+    Leaves are plain arrays so a schedule can be closed over, scanned, and
+    vmapped; a leading ``(B,)`` cell axis on every leaf gives per-cell
+    schedules (heterogeneous scenarios under the vectorized core).
+    """
+    P_gamma: jnp.ndarray      # (T, J, J) frame-indexed popularity transitions
+    h_scale: jnp.ndarray      # (T*K,) per-slot channel-gain multiplier
+    din_scale: jnp.ndarray    # (T*K,) per-slot input-size multiplier
+    burst_prob: jnp.ndarray   # (T*K,) per-slot flash-crowd redirect prob
+    burst_model: jnp.ndarray  # () int32 flash-crowd model id
+
+
+def schedule_slot_mod(sched: ScenarioSchedule | None, g) -> SlotMod | None:
+    """Slice the SlotMod for global slot ``g`` (clamped to the horizon).
+
+    Works on both unbatched ``(T*K,)`` and cell-batched ``(B, T*K)``
+    schedules; ``sched=None`` passes through (unmodulated env).
+    """
+    if sched is None:
+        return None
+    g = jnp.minimum(g, sched.h_scale.shape[-1] - 1)
+    return SlotMod(h_scale=sched.h_scale[..., g],
+                   din_scale=sched.din_scale[..., g],
+                   burst_prob=sched.burst_prob[..., g],
+                   burst_model=sched.burst_model)
+
+
+def schedule_frame_P(sched: ScenarioSchedule | None, t):
+    """Popularity transition matrix for frame ``t`` (or None = cfg default)."""
+    if sched is None:
+        return None
+    return sched.P_gamma[..., t, :, :]
+
+
+def _apply_burst(key, req, mod: SlotMod):
+    """Redirect each user's request to the hot model w.p. burst_prob."""
+    redirect = jax.random.uniform(key, req.shape) < mod.burst_prob
+    return jnp.where(redirect, mod.burst_model.astype(req.dtype), req)
+
+
 # -- sampling -----------------------------------------------------------------
 
 def _sample_positions(key, lambda_idx, cfg: EnvCfg):
@@ -155,10 +259,17 @@ def _sample_markov(key, idx, P):
 
 
 def _refresh_slot(key, state: EnvState, cfg: EnvCfg,
-                  new_lambda: bool = True) -> EnvState:
+                  new_lambda: bool = True, mod: SlotMod | None = None
+                  ) -> EnvState:
     """Draw per-slot randomness: location state, positions, fading,
-    requests, input sizes."""
-    kl, kp, kh, kr, kd, knext = jax.random.split(key, 6)
+    requests, input sizes.  ``mod`` (a SlotMod for the slot being drawn)
+    scales the channel gains / input sizes and redirects a burst fraction
+    of requests; ``mod=None`` is the exact unmodulated draw (same PRNG
+    splits, same arithmetic)."""
+    if mod is None:
+        kl, kp, kh, kr, kd, knext = jax.random.split(key, 6)
+    else:
+        kl, kp, kh, kr, kd, kb, knext = jax.random.split(key, 7)
     lam = (_sample_markov(kl, state.lambda_idx, cfg.P_lambda)
            if new_lambda else state.lambda_idx)
     pos = _sample_positions(kp, lam, cfg)
@@ -166,11 +277,32 @@ def _refresh_slot(key, state: EnvState, cfg: EnvCfg,
     req = _sample_requests(kr, state.gamma_idx, cfg)
     d_in = jax.random.uniform(kd, (cfg.U,), minval=cfg.d_in_mb[0],
                               maxval=cfg.d_in_mb[1]) * MB_BITS
+    if mod is not None:
+        h = h * mod.h_scale
+        d_in = d_in * mod.din_scale
+        req = _apply_burst(kb, req, mod)
     return EnvState(key=knext, gamma_idx=state.gamma_idx, lambda_idx=lam,
                     pos=pos, h=h, req=req, d_in=d_in, rho=state.rho)
 
 
-def env_reset(key, cfg: EnvCfg) -> EnvState:
+def env_reset(key, cfg: EnvCfg, mod: SlotMod | None = None) -> EnvState:
+    """Draw the initial env state (slot 0 randomness included).
+
+    Parameters
+    ----------
+    key : jax.random.PRNGKey
+        Episode reset key.
+    cfg : EnvCfg
+        Static environment configuration.
+    mod : SlotMod, optional
+        Scenario modulation for the first slot's draws (``None`` = the
+        unmodulated paper-default env).
+
+    Returns
+    -------
+    EnvState
+        Initial state with positions/fading/requests for slot 0 drawn.
+    """
     kg, kl, ks = jax.random.split(key, 3)
     st = EnvState(
         key=ks,
@@ -181,14 +313,16 @@ def env_reset(key, cfg: EnvCfg) -> EnvState:
         d_in=jnp.ones((cfg.U,)) * cfg.d_in_mb[0] * MB_BITS,
         rho=jnp.zeros((cfg.M,)))
     k, knext = jax.random.split(st.key)
-    return _refresh_slot(k, st._replace(key=knext), cfg, new_lambda=False)
+    return _refresh_slot(k, st._replace(key=knext), cfg, new_lambda=False,
+                         mod=mod)
 
 
-def env_reset_batch(keys, cfg: EnvCfg) -> EnvState:
+def env_reset_batch(keys, cfg: EnvCfg, mod: SlotMod | None = None) -> EnvState:
     """Reset B independent cells; every EnvState leaf gains a leading (B,)
     axis.  Cells share the static EnvCfg but evolve their own popularity /
-    location Markov chains from independent initial states."""
-    return jax.vmap(lambda k: env_reset(k, cfg))(keys)
+    location Markov chains from independent initial states.  ``mod``:
+    optional per-cell SlotMod with (B,) leaves."""
+    return jax.vmap(lambda k, m: env_reset(k, cfg, m))(keys, mod)
 
 
 def make_user_masks(cfg: EnvCfg, counts) -> jnp.ndarray:
@@ -202,14 +336,26 @@ def make_user_masks(cfg: EnvCfg, counts) -> jnp.ndarray:
     return (jnp.arange(cfg.U)[None, :] < counts[:, None]).astype(jnp.float32)
 
 
-def env_advance_frame(state: EnvState, cfg: EnvCfg) -> EnvState:
+def env_advance_frame(state: EnvState, cfg: EnvCfg, P_gamma=None,
+                      mod: SlotMod | None = None) -> EnvState:
     """Frame boundary: popularity Markov transition; requests for the first
     slot of the new frame are re-drawn under the new skewness.  The caching
     decision for the frame is applied afterwards via ``env_set_cache`` —
-    Algorithm 1 observes s(t) = {gamma(t)} *before* choosing rho(t)."""
-    k, kr, knext = jax.random.split(state.key, 3)
-    gamma = _sample_markov(k, state.gamma_idx, cfg.P_gamma)
+    Algorithm 1 observes s(t) = {gamma(t)} *before* choosing rho(t).
+
+    ``P_gamma`` overrides the popularity transition matrix for this frame
+    (diurnal scenarios pass ``schedule_frame_P(sched, t)``); ``mod`` applies
+    the flash-crowd redirect to the re-drawn requests.  Both default to the
+    unmodulated paper-default behavior (identical PRNG stream)."""
+    if mod is None:
+        k, kr, knext = jax.random.split(state.key, 3)
+    else:
+        k, kr, kb, knext = jax.random.split(state.key, 4)
+    P = cfg.P_gamma if P_gamma is None else P_gamma
+    gamma = _sample_markov(k, state.gamma_idx, P)
     req = _sample_requests(kr, gamma, cfg)
+    if mod is not None:
+        req = _apply_burst(kb, req, mod)
     return state._replace(key=knext, gamma_idx=gamma, req=req)
 
 
@@ -217,9 +363,15 @@ def env_set_cache(state: EnvState, rho) -> EnvState:
     return state._replace(rho=rho)
 
 
-def env_new_frame(state: EnvState, cfg: EnvCfg, rho) -> EnvState:
-    """Frame boundary: popularity Markov transition + new caching decision."""
-    return env_set_cache(env_advance_frame(state, cfg), rho)
+def env_new_frame(state: EnvState, cfg: EnvCfg, rho, P_gamma=None,
+                  mod: SlotMod | None = None) -> EnvState:
+    """Frame boundary: popularity Markov transition + new caching decision.
+
+    Accepts the same frame-indexed schedule slices as
+    ``env_advance_frame`` (``P_gamma`` transition override, ``mod`` burst
+    redirect) so external drivers (e.g. ``examples/serve_edge.py``) can run
+    any registered scenario."""
+    return env_set_cache(env_advance_frame(state, cfg, P_gamma, mod), rho)
 
 
 # -- slot dynamics (Eqs. 2-10, 23) --------------------------------------------
@@ -272,13 +424,39 @@ def slot_reward(metrics, cfg: EnvCfg, mask=None):
 
 
 def env_step_slot(state: EnvState, cfg: EnvCfg, models: ModelParams, b, xi,
-                  mask=None):
+                  mask=None, mod: SlotMod | None = None):
     """Execute allocation (b, xi) on the current slot, then draw the next
-    slot's randomness.  Returns (next_state, reward, metrics)."""
+    slot's randomness.
+
+    Parameters
+    ----------
+    state : EnvState
+        Current slot state (randomness for this slot already drawn).
+    cfg : EnvCfg
+        Static environment configuration.
+    models : ModelParams
+        The cell's GenAI model zoo.
+    b, xi : jnp.ndarray
+        Amended (U,) bandwidth and compute shares (simplex constraints
+        (11e)-(11g) already enforced by ``amend_actions``).
+    mask : jnp.ndarray, optional
+        (U,) 0/1 active-user mask; inactive users are excluded from the
+        reward average (heterogeneous-population cells).
+    mod : SlotMod, optional
+        Scenario modulation for the *next* slot's draws — slot g's metrics
+        always consume randomness that was modulated when drawn (DESIGN.md
+        §9).  ``None`` keeps the byte-identical paper-default stream.
+
+    Returns
+    -------
+    (EnvState, jnp.ndarray, dict)
+        Next-slot state, scalar reward (Eq. 23), and the per-user metric
+        dict from ``slot_metrics``.
+    """
     metrics = slot_metrics(state, cfg, models, b, xi)
     r = slot_reward(metrics, cfg, mask)
     k, knext = jax.random.split(state.key)
-    nxt = _refresh_slot(k, state._replace(key=knext), cfg)
+    nxt = _refresh_slot(k, state._replace(key=knext), cfg, mod=mod)
     return nxt, r, metrics
 
 

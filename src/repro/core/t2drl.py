@@ -36,13 +36,43 @@ from .buffers import (buffer_add, buffer_add_batch, buffer_init,
 from .d3pg import (D3PGCfg, actor_act, amend_actions, d3pg_init, d3pg_update,
                    make_actor_schedule)
 from .ddqn import DDQNCfg, amend_caching, ddqn_act, ddqn_init, ddqn_update
-from .env import (EnvCfg, EnvState, ModelParams, env_advance_frame,
-                  env_reset, env_reset_batch, env_set_cache, env_step_slot,
-                  make_models, make_user_masks, masked_mean, observe)
+from .env import (EnvCfg, EnvState, ModelParams, ScenarioSchedule,
+                  env_advance_frame, env_reset, env_reset_batch,
+                  env_set_cache, env_step_slot, make_models, make_user_masks,
+                  masked_mean, observe, schedule_frame_P, schedule_slot_mod)
 
 
 @dataclasses.dataclass(frozen=True)
 class T2DRLCfg:
+    """Static configuration of the two-timescale driver (jit-static).
+
+    Attributes
+    ----------
+    env : EnvCfg
+        Environment configuration (scenario transforms replace this).
+    allocator : {"d3pg", "ddpg", "schrs", "rcars"}
+        Short-timescale per-slot resource allocator.
+    cacher : {"ddqn", "static", "random"}
+        Long-timescale per-frame caching agent.
+    policy : {"independent", "shared"}
+        Vector-env mode (DESIGN.md §6): B independent learners vs one
+        learner fed by all cells.
+    episodes : int
+        Default training episode count (paper: 500).
+    warmup : int
+        Stored slot transitions before D3PG minibatch updates begin.
+    eps_start, eps_end, eps_decay_episodes : float, float, int
+        DDQN epsilon-greedy schedule over episodes.
+    lr_actor, lr_critic, lr_ddqn : float
+        Adam learning rates (paper default 1e-6; see DESIGN.md §8 for the
+        tuned CI-scale values).
+    L : int
+        Diffusion-actor denoising steps (paper Fig. 6a).
+    seed : int
+        Root PRNG seed for init and episode keys.
+    ga : GACfg
+        Genetic-algorithm parameters for the SCHRS baseline.
+    """
     env: EnvCfg = EnvCfg()
     allocator: str = "d3pg"     # d3pg | ddpg | schrs | rcars
     cacher: str = "ddqn"        # ddqn | static | random
@@ -146,20 +176,23 @@ def episode_sigma(cfg: T2DRLCfg, episode):
 
 
 def _episode_core(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
-                  mask=None):
+                  mask=None, mods: Optional[ScenarioSchedule] = None):
     """One episode of Algorithm 1 for a single env.  ``mask`` is an optional
-    (U,) 0/1 vector of active users (heterogeneous-population cells); with
-    ``mask=None`` the computation is identical to the pre-vectorization
-    ``run_episode``.  Returns (ts, stats)."""
+    (U,) 0/1 vector of active users (heterogeneous-population cells);
+    ``mods`` an optional per-episode ScenarioSchedule (unbatched leaves)
+    whose slices are fed to the env at every draw (DESIGN.md §9).  With
+    ``mask=None, mods=None`` the computation is identical to the
+    pre-vectorization ``run_episode``.  Returns (ts, stats)."""
     env_cfg = cfg.env
     d3 = cfg.d3pg_cfg()
     dq = cfg.ddqn_cfg()
     sched = make_actor_schedule(d3)
     models: ModelParams = ts["models"]
     k_env, key = jax.random.split(key)
-    env = env_reset(k_env, env_cfg)
+    env = env_reset(k_env, env_cfg, schedule_slot_mod(mods, 0))
 
-    def slot_step(carry, k_slot):
+    def slot_step(carry, xs):
+        k_slot, g = xs                 # g: global slot index t*K + k
         ts, env = carry
         ks = jax.random.split(k_slot, 4)
         s = observe(env, env_cfg, models, mask)
@@ -172,7 +205,8 @@ def _episode_core(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
             b, xi = ga_allocate(ks[0], env, env_cfg, models, cfg.ga)
         else:  # rcars
             b, xi = rcars_allocate(env, env_cfg)
-        env1, r, m = env_step_slot(env, env_cfg, models, b, xi, mask)
+        env1, r, m = env_step_slot(env, env_cfg, models, b, xi, mask,
+                                   schedule_slot_mod(mods, g + 1))
         new_ts = ts
         if cfg.allocator in ("d3pg", "ddpg"):
             s1 = observe(env1, env_cfg, models, mask)
@@ -197,10 +231,12 @@ def _episode_core(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
                      (m["d_tl"] > env_cfg.tau).astype(jnp.float32), mask)}
         return (new_ts, env1), stats
 
-    def frame_step(carry, k_frame):
+    def frame_step(carry, xs):
+        k_frame, t = xs                # t: frame index into the schedule
         ts, env = carry
         kf = jax.random.split(k_frame, 3)
-        env = env_advance_frame(env, env_cfg)
+        env = env_advance_frame(env, env_cfg, schedule_frame_P(mods, t),
+                                schedule_slot_mod(mods, t * env_cfg.K))
         gamma_t = env.gamma_idx
         if cfg.cacher == "ddqn":
             a_int = ddqn_act(ts["ddqn"], dq, gamma_t, kf[0], eps)
@@ -213,7 +249,9 @@ def _episode_core(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
             rho = random_cache(kf[0], models, env_cfg)
         env = env_set_cache(env, rho)
         (ts, env), slot_stats = jax.lax.scan(
-            slot_step, (ts, env), jax.random.split(kf[1], env_cfg.K))
+            slot_step, (ts, env),
+            (jax.random.split(kf[1], env_cfg.K),
+             t * env_cfg.K + jnp.arange(env_cfg.K)))
         # frame reward (32): average slot reward minus storage penalty
         # (erratum-corrected sign — see DESIGN.md §8)
         storage_viol = (jnp.sum(rho * models.c) > env_cfg.C).astype(jnp.float32)
@@ -223,7 +261,8 @@ def _episode_core(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
         return (ts, env), out
 
     (ts, env), frames = jax.lax.scan(
-        frame_step, (ts, env), jax.random.split(key, env_cfg.T))
+        frame_step, (ts, env),
+        (jax.random.split(key, env_cfg.T), jnp.arange(env_cfg.T)))
 
     # DDQN frame transitions: (gamma_t, a_t, r_t, gamma_{t+1}) for t < T-1
     if cfg.cacher == "ddqn" and train:
@@ -258,9 +297,11 @@ def _episode_core(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "train"))
-def run_episode(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True):
-    """One episode of Algorithm 1 (single env).  Returns (ts, stats)."""
-    return _episode_core(ts, cfg, key, eps, sigma, train=train)
+def run_episode(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
+                mods: Optional[ScenarioSchedule] = None):
+    """One episode of Algorithm 1 (single env).  ``mods``: optional
+    unbatched ScenarioSchedule (DESIGN.md §9).  Returns (ts, stats)."""
+    return _episode_core(ts, cfg, key, eps, sigma, train=train, mods=mods)
 
 
 def _batch_mean(x, masks=None):
@@ -272,12 +313,14 @@ def _batch_mean(x, masks=None):
 
 
 def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
-                         train: bool = True, masks=None):
+                         train: bool = True, masks=None,
+                         mods: Optional[ScenarioSchedule] = None):
     """One episode in shared-learner vector-env mode: B cells roll out in
     lockstep feeding per-cell replay buffers, and ONE shared policy takes a
     single optimizer step per slot on a fixed-size minibatch pooled evenly
     across the cells' buffers.  Per-step learner cost is independent of B —
     the standard vector-env trade (update:data ratio scales as 1/B).
+    ``mods``: optional ScenarioSchedule with per-cell (B,)-leading leaves.
     Returns (ts, stats) with per-cell stats of shape (B,)."""
     env_cfg = cfg.env
     d3 = cfg.d3pg_cfg()
@@ -287,7 +330,7 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
     B = keys.shape[0]
     k_env = jax.vmap(lambda k: jax.random.split(k)[0])(keys)
     key = jax.random.split(keys[0])[1]     # driver key (frames, updates)
-    env = env_reset_batch(k_env, env_cfg)
+    env = env_reset_batch(k_env, env_cfg, schedule_slot_mod(mods, 0))
     n_slot = max(1, d3.batch // B)         # per-cell slice of the minibatch
     n_frame = max(1, dq.batch // B)
     row_masks = (None if masks is None
@@ -299,7 +342,8 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
             lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
             batch_be)
 
-    def slot_step(carry, k_slot):
+    def slot_step(carry, xs):
+        k_slot, g = xs                 # g: global slot index t*K + k
         ts, env = carry
         ks = jax.random.split(k_slot, 4)
         s = jax.vmap(lambda e, m, mk: observe(e, env_cfg, m, mk))(
@@ -317,9 +361,9 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
         else:  # rcars
             b, xi = jax.vmap(lambda e: rcars_allocate(e, env_cfg))(env)
         env1, r, m = jax.vmap(
-            lambda e, mo, bb, xx, mk: env_step_slot(e, env_cfg, mo, bb, xx,
-                                                    mk))(
-            env, models, b, xi, masks)
+            lambda e, mo, bb, xx, mk, md: env_step_slot(e, env_cfg, mo, bb,
+                                                        xx, mk, md))(
+            env, models, b, xi, masks, schedule_slot_mod(mods, g + 1))
         new_ts = ts
         if cfg.allocator in ("d3pg", "ddpg"):
             s1 = jax.vmap(lambda e, mo, mk: observe(e, env_cfg, mo, mk))(
@@ -347,10 +391,13 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
                      (m["d_tl"] > env_cfg.tau).astype(jnp.float32), masks)}
         return (new_ts, env1), stats
 
-    def frame_step(carry, k_frame):
+    def frame_step(carry, xs):
+        k_frame, t = xs                # t: frame index into the schedule
         ts, env = carry
         kf = jax.random.split(k_frame, 3)
-        env = jax.vmap(lambda e: env_advance_frame(e, env_cfg))(env)
+        env = jax.vmap(lambda e, P, md: env_advance_frame(e, env_cfg, P, md))(
+            env, schedule_frame_P(mods, t),
+            schedule_slot_mod(mods, t * env_cfg.K))
         gamma_t = env.gamma_idx                               # (B,)
         if cfg.cacher == "ddqn":
             a_int = ddqn_act(ts["ddqn"], dq, gamma_t, kf[0], eps)
@@ -366,7 +413,9 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
                                      env_cfg)
         env = jax.vmap(env_set_cache)(env, rho)
         (ts, env), slot_stats = jax.lax.scan(
-            slot_step, (ts, env), jax.random.split(kf[1], env_cfg.K))
+            slot_step, (ts, env),
+            (jax.random.split(kf[1], env_cfg.K),
+             t * env_cfg.K + jnp.arange(env_cfg.K)))
         storage_viol = (jnp.sum(rho * models.c, axis=-1)
                         > env_cfg.C).astype(jnp.float32)      # (B,)
         r_frame = jnp.mean(slot_stats["r"], axis=0) - storage_viol * env_cfg.Xi
@@ -375,7 +424,8 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
         return (ts, env), out
 
     (ts, env), frames = jax.lax.scan(
-        frame_step, (ts, env), jax.random.split(key, env_cfg.T))
+        frame_step, (ts, env),
+        (jax.random.split(key, env_cfg.T), jnp.arange(env_cfg.T)))
 
     if cfg.cacher == "ddqn" and train:
         def add_and_update(ts, t):
@@ -410,36 +460,41 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
 
 
 def _episode_batch(ts, cfg: T2DRLCfg, keys, eps, sigma, *, train: bool,
-                   masks=None):
+                   masks=None, mods=None):
     """One episode across the batch; keys: (B,) per-cell episode keys.
 
     ``cfg.policy == "independent"`` vmaps the single-env episode (B
     independent learners); B=1 bypasses vmap so the single-env program (and
     its cond-based update gating) is preserved exactly.  ``"shared"``
-    delegates to the shared-learner lockstep core."""
+    delegates to the shared-learner lockstep core.  ``mods``: optional
+    ScenarioSchedule with per-cell (B,)-leading leaves."""
     if cfg.policy == "shared":
         return _episode_core_shared(ts, cfg, keys, eps, sigma, train=train,
-                                    masks=masks)
+                                    masks=masks, mods=mods)
     B = keys.shape[0]
     if B == 1:
         mask = None if masks is None else masks[0]
+        mods1 = None if mods is None else jax.tree.map(lambda x: x[0], mods)
         ts1, stats = _episode_core(
             jax.tree.map(lambda x: x[0], ts), cfg, keys[0], eps, sigma,
-            train=train, mask=mask)
+            train=train, mask=mask, mods=mods1)
         expand = functools.partial(jax.tree.map, lambda x: x[None])
         return expand(ts1), expand(stats)
     return jax.vmap(
-        lambda t, k, m: _episode_core(t, cfg, k, eps, sigma, train=train,
-                                      mask=m))(ts, keys, masks)
+        lambda t, k, m, md: _episode_core(t, cfg, k, eps, sigma, train=train,
+                                          mask=m, mods=md))(
+        ts, keys, masks, mods)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "train"))
-def run_training(ts, cfg: T2DRLCfg, key, ep_idx, masks=None, *,
+def run_training(ts, cfg: T2DRLCfg, key, ep_idx, masks=None, mods=None, *,
                  train: bool = True):
     """Scan ``_episode_batch`` over the (absolute) episode indices
     ``ep_idx`` — a whole multi-episode, multi-cell run in one compiled call.
     Epsilon/sigma schedules are traced functions of the episode index.
-    Returns (ts, history) with history leaves of shape (len(ep_idx), B)."""
+    ``mods``: optional ScenarioSchedule with per-cell (B,)-leading leaves,
+    replayed every episode.  Returns (ts, history) with history leaves of
+    shape (len(ep_idx), B)."""
     B = ts["models"].a1.shape[0]
 
     def ep_step(ts, ep):
@@ -448,13 +503,13 @@ def run_training(ts, cfg: T2DRLCfg, key, ep_idx, masks=None, *,
         eps = episode_epsilon(cfg, e)
         sigma = episode_sigma(cfg, e)
         return _episode_batch(ts, cfg, _batch_keys(k_ep, B), eps, sigma,
-                              train=train, masks=masks)
+                              train=train, masks=masks, mods=mods)
 
     return jax.lax.scan(ep_step, ts, ep_idx)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def run_eval(ts, cfg: T2DRLCfg, key, ep_idx, masks=None):
+def run_eval(ts, cfg: T2DRLCfg, key, ep_idx, masks=None, mods=None):
     """Greedy evaluation scan: eps = sigma = 0, no updates, ``ts`` is not
     threaded between episodes.  Returns history leaves (len(ep_idx), B)."""
     B = ts["models"].a1.shape[0]
@@ -463,7 +518,7 @@ def run_eval(ts, cfg: T2DRLCfg, key, ep_idx, masks=None):
     def ep_step(_, ep):
         k_ep = jax.random.fold_in(key, ep)
         _, stats = _episode_batch(ts, cfg, _batch_keys(k_ep, B), zero, zero,
-                                  train=False, masks=masks)
+                                  train=False, masks=masks, mods=mods)
         return None, stats
 
     _, stats = jax.lax.scan(ep_step, None, ep_idx)
@@ -487,22 +542,63 @@ def _expand_env_axis(ts, cfg: T2DRLCfg):
             for k, v in ts.items()}
 
 
+def _broadcast_mods(mods: Optional[ScenarioSchedule], num_envs: int):
+    """Give an unbatched schedule a leading (num_envs,) cell axis (no-op for
+    already-batched schedules or ``None``)."""
+    if mods is None:
+        return None
+    if mods.h_scale.ndim == 2:
+        if mods.h_scale.shape[0] != num_envs:
+            raise ValueError(
+                f"per-cell schedule was built for {mods.h_scale.shape[0]} "
+                f"cells but num_envs={num_envs}; rebuild with "
+                f"build_scenario(..., num_envs={num_envs})")
+        return mods
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (num_envs,) + x.shape), mods)
+
+
 def train_t2drl(cfg: T2DRLCfg, *, episodes: Optional[int] = None,
                 num_envs: int = 1, user_counts: Optional[Sequence[int]] = None,
                 share_models: bool = False, log_every: int = 0,
-                callback=None):
+                callback=None, mods: Optional[ScenarioSchedule] = None):
     """Full training run over ``num_envs`` parallel edge cells (multi-seed).
 
-    Returns (train_state, history dict of stacked arrays).  History leaves
-    have shape (episodes,) for num_envs=1 (legacy layout) and
-    (episodes, num_envs) otherwise; likewise the train state keeps its
-    leading batch axis only for num_envs > 1.
+    Parameters
+    ----------
+    cfg : T2DRLCfg
+        Method + environment configuration (jit-static).
+    episodes : int, optional
+        Episode count (defaults to ``cfg.episodes``).
+    num_envs : int
+        Number of parallel edge cells B trained through the vectorized core
+        (DESIGN.md §6).  ``cfg.policy`` selects independent vs shared
+        learners.
+    user_counts : sequence of int, optional
+        Per-cell active-user counts (len ``num_envs``) — heterogeneous
+        populations via masking.
+    share_models : bool
+        Broadcast cell 0's model zoo to every cell (pure multi-seed runs).
+    log_every : int
+        Print a progress line every N episodes (chunks the episode scan;
+        results are unchanged because keys derive from absolute indices).
+    callback : callable, optional
+        ``callback(episode, mean_stats)`` after every episode.
+    mods : ScenarioSchedule, optional
+        Scenario modulation schedule (DESIGN.md §9), e.g. from
+        ``repro.scenarios.build_scenario``.  Unbatched leaves are broadcast
+        to all cells; per-cell leaves (leading ``(num_envs,)`` axis) give
+        heterogeneous scenarios.
 
-    ``user_counts`` (len num_envs) activates heterogeneous per-cell user
-    populations via masking; ``share_models`` broadcasts one model zoo to
-    every cell.  With ``log_every``/``callback`` the episode scan runs in
-    chunks (keys are derived from absolute episode indices, so chunking
-    never changes the results)."""
+    Returns
+    -------
+    (dict, dict)
+        Final train-state pytree and history dict of stacked arrays.
+        History leaves have shape ``(episodes,)`` for ``num_envs=1``
+        (legacy layout) and ``(episodes, num_envs)`` otherwise; likewise
+        the train state keeps its leading batch axis only for
+        ``num_envs > 1``.
+    """
     episodes = episodes or cfg.episodes
     key = jax.random.PRNGKey(cfg.seed)
     k_init, key = jax.random.split(key)
@@ -512,12 +608,13 @@ def train_t2drl(cfg: T2DRLCfg, *, episodes: Optional[int] = None,
         if len(user_counts) != num_envs:
             raise ValueError("user_counts must have one entry per env")
         masks = make_user_masks(cfg.env, user_counts)
+    mods = _broadcast_mods(mods, num_envs)
     chunk = episodes if not (log_every or callback) else (log_every or 1)
     chunks, ep0 = [], 0
     while ep0 < episodes:
         n = min(chunk, episodes - ep0)
         ts, stats = run_training(ts, cfg, key, jnp.arange(ep0, ep0 + n),
-                                 masks, train=True)
+                                 masks, mods, train=True)
         chunks.append(stats)
         if log_every:
             last = {k: float(jnp.mean(v[-1])) for k, v in stats.items()}
@@ -538,19 +635,45 @@ def train_t2drl(cfg: T2DRLCfg, *, episodes: Optional[int] = None,
 
 
 def eval_t2drl(ts, cfg: T2DRLCfg, *, episodes: int = 10, seed: int = 10_000,
-               user_counts: Optional[Sequence[int]] = None):
-    """Greedy evaluation (no exploration, no updates).  Accepts a single
-    train state or a batched one (leading (B,) axis, as returned by
-    ``train_t2drl(..., num_envs=B)``); returns scalar means over episodes
-    and cells."""
+               user_counts: Optional[Sequence[int]] = None,
+               mods: Optional[ScenarioSchedule] = None):
+    """Greedy evaluation (no exploration, no updates).
+
+    Parameters
+    ----------
+    ts : dict
+        Train-state pytree — single (legacy layout) or batched (leading
+        ``(B,)`` axis, as returned by ``train_t2drl(..., num_envs=B)``).
+    cfg : T2DRLCfg
+        Method + environment configuration (jit-static).
+    episodes : int
+        Number of greedy evaluation episodes.
+    seed : int
+        PRNG seed for the evaluation episode keys (disjoint from training
+        seeds by default).
+    user_counts : sequence of int, optional
+        Per-cell active-user counts (one entry per cell in ``ts``).
+    mods : ScenarioSchedule, optional
+        Scenario modulation schedule; unbatched leaves are broadcast to all
+        cells.  Evaluating under a different schedule than training
+        measures out-of-scenario generalization.
+
+    Returns
+    -------
+    dict
+        Scalar means over episodes and cells: ``episode_reward``,
+        ``mean_reward``, ``hit_ratio``, ``utility``, ``delay``,
+        ``quality``, ``deadline_viol``, ``storage_viol``.
+    """
     batched = ts["models"].a1.ndim == 2
     if not batched:
         ts = _expand_env_axis(ts, cfg)
+    B = ts["models"].a1.shape[0]
     masks = None
     if user_counts is not None:
-        if len(user_counts) != ts["models"].a1.shape[0]:
+        if len(user_counts) != B:
             raise ValueError("user_counts must have one entry per env")
         masks = make_user_masks(cfg.env, user_counts)
     stats = run_eval(ts, cfg, jax.random.PRNGKey(seed),
-                     jnp.arange(episodes), masks)
+                     jnp.arange(episodes), masks, _broadcast_mods(mods, B))
     return {k: jnp.mean(v) for k, v in stats.items()}

@@ -1,7 +1,7 @@
 """Adam/AdamW with dtype-configurable moments and global-norm clipping.
 
 Moments may be kept in bf16 (``moment_dtype``) — used for the very large MoE
-configs where fp32 Adam state does not fit the pod (DESIGN.md §9)."""
+configs where fp32 Adam state does not fit the pod (DESIGN.md §10)."""
 from __future__ import annotations
 
 import jax

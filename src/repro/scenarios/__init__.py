@@ -1,0 +1,17 @@
+"""Config-driven scenario registry for heterogeneous edge workloads.
+
+Public entry points (see DESIGN.md §9 for the modulation-hook contract):
+
+- ``build_scenario(name, env_cfg, num_envs)`` — materialize a scenario
+  into the ``ScenarioBuild(env, mods, user_counts)`` consumed by
+  ``train_t2drl`` / ``eval_t2drl``.
+- ``list_scenarios()`` / ``get_scenario(name)`` — inspect the registry.
+- ``register(Scenario(...))`` / ``compose(name, *parts)`` — define new
+  (possibly stacked) scenarios.
+- ``ModSpec`` / ``make_schedule`` — the modulation parameters and their
+  materializer, for scenarios defined from scratch.
+"""
+from .registry import (ModSpec, Scenario, ScenarioBuild,  # noqa: F401
+                       build_scenario, compose, get_scenario,
+                       list_scenarios, make_schedule, register)
+from . import builtin  # noqa: F401  (registers the built-in scenarios)

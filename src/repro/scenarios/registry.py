@@ -1,0 +1,286 @@
+"""Scenario registry: named, composable workload transforms (DESIGN.md §9).
+
+A *scenario* is a declarative recipe for a heterogeneous edge workload:
+
+- a static transform over :class:`~repro.core.EnvCfg` (cell geometry,
+  capacities, chain definitions — anything jit-static), plus
+- a :class:`ModSpec` of time-varying modulation parameters, materialized
+  once per build into a :class:`~repro.core.ScenarioSchedule` of
+  precomputed arrays the env consumes at draw time (diurnal popularity
+  rotation, flash-crowd bursts, degraded channels), plus
+- optional per-cell user counts for heterogeneous populations.
+
+Scenarios compose: each one is a transform over the (cfg, spec,
+user_counts) triple, so ``compose("rush-hour", "diurnal", "flash-crowd")``
+stacks modulations the same way the builtins do.  ``build_scenario`` turns
+a name (or Scenario) into the arrays the training core takes directly::
+
+    from repro.scenarios import build_scenario
+    b = build_scenario("flash-crowd", cfg.env, num_envs=4)
+    cfg = dataclasses.replace(cfg, env=b.env)
+    ts, hist = train_t2drl(cfg, num_envs=4, mods=b.mods,
+                           user_counts=b.user_counts)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EnvCfg, ScenarioSchedule
+
+
+@dataclasses.dataclass(frozen=True)
+class ModSpec:
+    """Plain-python modulation parameters, materialized by ``make_schedule``.
+
+    All-default instances materialize to ``None`` (no schedule — the env
+    runs its byte-identical unmodulated path), which is what makes the
+    ``paper-default`` scenario an exact reproduction.
+
+    Attributes
+    ----------
+    diurnal_period : int
+        Frames per popularity-rotation cycle (0 = off).  Over each cycle
+        the dominant popularity state sweeps through all J states.
+    diurnal_strength : float
+        Peak mixture weight of the rotated target chain in [0, 1].
+    burst_period : int
+        Slots between flash-crowd onsets (0 = off).
+    burst_width : int
+        Slots each flash crowd lasts.
+    burst_prob : float
+        Per-user probability of being redirected to the hot model during a
+        burst.
+    burst_model : int
+        The hot model id requests are redirected to.
+    burst_din_scale : float
+        Input-size multiplier during a burst (crowds upload more).
+    h_scale : float
+        Homogeneous channel-gain multiplier (all cells, all slots).
+    degraded_frac : float
+        Fraction of cells whose channel is additionally degraded
+        (cell-heterogeneous; the first ``ceil(frac*B)`` cells).
+    degraded_h_scale : float
+        Channel-gain multiplier applied to the degraded cells.
+    """
+    diurnal_period: int = 0
+    diurnal_strength: float = 0.0
+    burst_period: int = 0
+    burst_width: int = 2
+    burst_prob: float = 0.85
+    burst_model: int = 0
+    burst_din_scale: float = 1.0
+    h_scale: float = 1.0
+    degraded_frac: float = 0.0
+    degraded_h_scale: float = 1.0
+
+    def is_identity(self) -> bool:
+        return self == ModSpec()
+
+
+def _rotated_P(base: np.ndarray, spec: ModSpec, T: int) -> np.ndarray:
+    """(T, J, J) frame-indexed popularity transitions: a convex mixture of
+    the base chain and a 'push' chain whose dominant state rotates through
+    the J states once per diurnal period."""
+    J = base.shape[0]
+    out = np.tile(base, (T, 1, 1))
+    if not spec.diurnal_period or spec.diurnal_strength <= 0.0:
+        return out
+    for t in range(T):
+        phase = (t % spec.diurnal_period) / spec.diurnal_period
+        s = int(phase * J) % J
+        push = np.full((J, J), 0.3 / J)
+        push[:, s] += 0.7
+        w = spec.diurnal_strength * 0.5 * (
+            1.0 - math.cos(2.0 * math.pi * phase))
+        out[t] = (1.0 - w) * base + w * push
+    return out
+
+
+def make_schedule(spec: ModSpec, cfg: EnvCfg,
+                  num_envs: int = 1) -> Optional[ScenarioSchedule]:
+    """Materialize a ModSpec into per-episode modulation arrays.
+
+    Parameters
+    ----------
+    spec : ModSpec
+        Modulation parameters (identity specs return ``None``).
+    cfg : EnvCfg
+        The (already scenario-transformed) env configuration; fixes the
+        horizon ``T`` frames × ``K`` slots and the J popularity states.
+    num_envs : int
+        Cell count B.  Cell-heterogeneous specs (``degraded_frac > 0``)
+        force per-cell leaves with a leading ``(B,)`` axis; homogeneous
+        specs return unbatched leaves that the training API broadcasts.
+
+    Returns
+    -------
+    ScenarioSchedule or None
+        ``None`` iff the spec is the identity — callers then run the
+        byte-identical unmodulated env path.
+    """
+    if spec.is_identity():
+        return None
+    T, K, J = cfg.T, cfg.K, len(cfg.gammas)
+    S = T * K
+    P = _rotated_P(np.asarray(cfg.P_gamma, np.float32), spec, T)
+    h = np.full((S,), spec.h_scale, np.float32)
+    din = np.ones((S,), np.float32)
+    bp = np.zeros((S,), np.float32)
+    if spec.burst_period:
+        g = np.arange(S)
+        in_burst = (g % spec.burst_period) < spec.burst_width
+        bp[in_burst] = spec.burst_prob
+        din[in_burst] *= spec.burst_din_scale
+    sched = ScenarioSchedule(
+        P_gamma=jnp.asarray(P), h_scale=jnp.asarray(h),
+        din_scale=jnp.asarray(din), burst_prob=jnp.asarray(bp),
+        burst_model=jnp.int32(min(spec.burst_model, cfg.M - 1)))
+    if spec.degraded_frac > 0.0:
+        n_bad = math.ceil(spec.degraded_frac * num_envs)
+        cell_scale = np.ones((num_envs,), np.float32)
+        cell_scale[:n_bad] = spec.degraded_h_scale
+        sched = ScenarioSchedule(
+            P_gamma=jnp.broadcast_to(sched.P_gamma, (num_envs, T, J, J)),
+            h_scale=jnp.asarray(cell_scale[:, None] * h),
+            din_scale=jnp.broadcast_to(sched.din_scale, (num_envs, S)),
+            burst_prob=jnp.broadcast_to(sched.burst_prob, (num_envs, S)),
+            burst_model=jnp.broadcast_to(sched.burst_model, (num_envs,)))
+    return sched
+
+
+def _id_env(cfg: EnvCfg) -> EnvCfg:
+    return cfg
+
+
+def _id_mods(spec: ModSpec) -> ModSpec:
+    return spec
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named, composable workload transform.
+
+    Attributes
+    ----------
+    name : str
+        Registry key (kebab-case).
+    summary : str
+        One-line description shown by ``list_scenarios``/the harness.
+    env : callable
+        ``EnvCfg -> EnvCfg`` static transform.
+    mods : callable
+        ``ModSpec -> ModSpec`` modulation transform (composable).
+    user_counts : callable, optional
+        ``(EnvCfg, num_envs) -> tuple[int, ...]`` per-cell active-user
+        counts, or None for homogeneous full-population cells.
+    """
+    name: str
+    summary: str
+    env: Callable[[EnvCfg], EnvCfg] = _id_env
+    mods: Callable[[ModSpec], ModSpec] = _id_mods
+    user_counts: Optional[Callable[[EnvCfg, int], Tuple[int, ...]]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioBuild:
+    """Materialized scenario: everything the training/eval API consumes.
+
+    Attributes
+    ----------
+    env : EnvCfg
+        Transformed environment configuration (put into ``T2DRLCfg.env``).
+    mods : ScenarioSchedule or None
+        Modulation schedule for ``train_t2drl(..., mods=...)`` /
+        ``eval_t2drl(..., mods=...)``; ``None`` = unmodulated env.
+    user_counts : tuple of int, or None
+        Per-cell user counts for heterogeneous populations.
+    """
+    env: EnvCfg
+    mods: Optional[ScenarioSchedule]
+    user_counts: Optional[Tuple[int, ...]]
+
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    """Add a scenario to the registry (name must be unused)."""
+    if scenario.name in _REGISTRY:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    """Look up a registered scenario by name."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; registered: "
+                       f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def list_scenarios() -> Dict[str, str]:
+    """Registered scenario names -> one-line summaries (sorted)."""
+    return {n: _REGISTRY[n].summary for n in sorted(_REGISTRY)}
+
+
+def compose(name: str, *parts, summary: str = "") -> Scenario:
+    """Stack scenarios left-to-right into a new (unregistered) Scenario.
+
+    Env transforms and ModSpec transforms apply sequentially; the last
+    part supplying ``user_counts`` wins.
+    """
+    parts = tuple(get_scenario(p) if isinstance(p, str) else p
+                  for p in parts)
+
+    def env(cfg: EnvCfg) -> EnvCfg:
+        for p in parts:
+            cfg = p.env(cfg)
+        return cfg
+
+    def mods(spec: ModSpec) -> ModSpec:
+        for p in parts:
+            spec = p.mods(spec)
+        return spec
+
+    counts = None
+    for p in parts:
+        if p.user_counts is not None:
+            counts = p.user_counts
+    return Scenario(name=name, summary=summary or " + ".join(
+        p.name for p in parts), env=env, mods=mods, user_counts=counts)
+
+
+def build_scenario(scenario, base_env: EnvCfg,
+                   num_envs: int = 1) -> ScenarioBuild:
+    """Materialize a scenario against a base EnvCfg for B cells.
+
+    Parameters
+    ----------
+    scenario : str or Scenario
+        Registry name or an (optionally composed) Scenario object.
+    base_env : EnvCfg
+        Starting configuration the scenario transforms.
+    num_envs : int
+        Cell count B the scenario will run under (fixes per-cell leaves
+        and user-count tuples).
+
+    Returns
+    -------
+    ScenarioBuild
+        ``(env, mods, user_counts)`` ready for ``train_t2drl`` /
+        ``eval_t2drl`` / the benchmark harness.
+    """
+    if isinstance(scenario, str):
+        scenario = get_scenario(scenario)
+    env = scenario.env(base_env)
+    mods = make_schedule(scenario.mods(ModSpec()), env, num_envs)
+    counts = (None if scenario.user_counts is None
+              else tuple(scenario.user_counts(env, num_envs)))
+    return ScenarioBuild(env=env, mods=mods, user_counts=counts)

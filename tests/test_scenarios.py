@@ -1,0 +1,197 @@
+"""Scenario registry + modulation hooks (DESIGN.md §9): paper-default
+byte-identity pin, deterministic hook semantics, per-scenario jit/shape
+checks under num_envs>1, composition, and an eval-harness smoke."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EnvCfg, SlotMod, T2DRLCfg, env_reset, eval_t2drl,
+                        schedule_frame_P, schedule_slot_mod, train_t2drl)
+from repro.core.env import _refresh_slot
+from repro.scenarios import (ModSpec, Scenario, build_scenario, compose,
+                             get_scenario, list_scenarios, make_schedule,
+                             register)
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = T2DRLCfg(env=EnvCfg(U=4, M=4, T=3, K=3), warmup=5,
+               lr_actor=1e-4, lr_critic=1e-4, lr_ddqn=1e-3, L=2,
+               eps_decay_episodes=4, seed=0)
+
+ALL = sorted(list_scenarios())
+
+
+def _mod(h=1.0, din=1.0, bp=0.0, bm=0):
+    return SlotMod(h_scale=jnp.float32(h), din_scale=jnp.float32(din),
+                   burst_prob=jnp.float32(bp), burst_model=jnp.int32(bm))
+
+
+# -- paper-default pin ---------------------------------------------------------
+
+def test_paper_default_build_is_identity():
+    b = build_scenario("paper-default", CFG.env, num_envs=4)
+    assert b.mods is None and b.user_counts is None and b.env == CFG.env
+
+
+def test_paper_default_training_bit_identical_to_plain():
+    """The scenario API with paper-default runs the byte-identical program
+    (same PRNG stream, same arithmetic) as plain train_t2drl."""
+    b = build_scenario("paper-default", CFG.env, num_envs=2)
+    _, h0 = train_t2drl(CFG, episodes=2, num_envs=2)
+    _, h1 = train_t2drl(dataclasses.replace(CFG, env=b.env), episodes=2,
+                        num_envs=2, mods=b.mods, user_counts=b.user_counts)
+    for k in h0:
+        np.testing.assert_array_equal(np.asarray(h0[k]), np.asarray(h1[k]),
+                                      err_msg=k)
+
+
+# -- deterministic hook semantics ---------------------------------------------
+
+def test_h_scale_scales_drawn_gains_exactly():
+    st = env_reset(KEY, CFG.env)
+    a = _refresh_slot(KEY, st, CFG.env, mod=_mod(h=1.0))
+    b = _refresh_slot(KEY, st, CFG.env, mod=_mod(h=0.1))
+    np.testing.assert_allclose(np.asarray(b.h), 0.1 * np.asarray(a.h),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.req), np.asarray(b.req))
+
+
+def test_din_scale_scales_input_sizes_exactly():
+    st = env_reset(KEY, CFG.env)
+    a = _refresh_slot(KEY, st, CFG.env, mod=_mod(din=1.0))
+    b = _refresh_slot(KEY, st, CFG.env, mod=_mod(din=2.5))
+    np.testing.assert_allclose(np.asarray(b.d_in), 2.5 * np.asarray(a.d_in),
+                               rtol=1e-6)
+
+
+def test_burst_prob_one_redirects_every_request():
+    st = env_reset(KEY, CFG.env)
+    out = _refresh_slot(KEY, st, CFG.env, mod=_mod(bp=1.0, bm=2))
+    np.testing.assert_array_equal(np.asarray(out.req), 2)
+    out = _refresh_slot(KEY, st, CFG.env, mod=_mod(bp=0.0, bm=2))
+    base = _refresh_slot(KEY, st, CFG.env, mod=_mod())
+    np.testing.assert_array_equal(np.asarray(out.req), np.asarray(base.req))
+
+
+def test_schedule_slicing_unbatched_and_batched():
+    sched = make_schedule(ModSpec(burst_period=4, burst_width=2,
+                                  burst_prob=0.5), CFG.env)
+    S = CFG.env.T * CFG.env.K
+    assert sched.h_scale.shape == (S,)
+    assert sched.P_gamma.shape == (CFG.env.T, 3, 3)
+    m = schedule_slot_mod(sched, 0)
+    assert m.burst_prob.shape == () and float(m.burst_prob) == 0.5
+    assert float(schedule_slot_mod(sched, 2).burst_prob) == 0.0
+    # clamped past the horizon (the last refresh draws slot T*K)
+    assert m.h_scale.shape == ()
+    _ = schedule_slot_mod(sched, S + 5)
+    # batched: leading (B,) cell axis on every leaf
+    b = build_scenario("degraded-channel", CFG.env, num_envs=3)
+    assert b.mods.h_scale.shape == (3, S)
+    mb = schedule_slot_mod(b.mods, 1)
+    assert mb.h_scale.shape == (3,)
+    assert schedule_frame_P(b.mods, 0).shape == (3, 3, 3)
+    # first ceil(0.5*3)=2 cells degraded by -10 dB
+    np.testing.assert_allclose(np.asarray(b.mods.h_scale[:, 0]),
+                               [0.1, 0.1, 1.0], rtol=1e-6)
+
+
+def test_rotated_P_rows_are_stochastic():
+    sched = make_schedule(ModSpec(diurnal_period=2, diurnal_strength=1.0),
+                          CFG.env)
+    P = np.asarray(sched.P_gamma)
+    np.testing.assert_allclose(P.sum(axis=-1), 1.0, atol=1e-6)
+    assert not np.allclose(P[1], np.asarray(CFG.env.P_gamma))
+
+
+# -- every registered scenario trains under the batched core -------------------
+
+# every scenario through the independent core; shared-learner mode on the
+# three structurally distinct schedule layouts (None / batched mods+masks /
+# batched mods) — the other scenarios reuse those compiled structures
+_SHARED = ("paper-default", "rush-hour", "degraded-channel")
+
+
+@pytest.mark.parametrize("name,policy",
+                         [(n, "independent") for n in ALL]
+                         + [(n, "shared") for n in _SHARED])
+def test_registered_scenarios_train_batched(name, policy):
+    b = build_scenario(name, CFG.env, num_envs=3)
+    cfg = dataclasses.replace(CFG, env=b.env, policy=policy)
+    ts, hist = train_t2drl(cfg, episodes=2, num_envs=3, mods=b.mods,
+                           user_counts=b.user_counts)
+    r = np.asarray(hist["episode_reward"])
+    assert r.shape == (2, 3)
+    assert np.all(np.isfinite(r))
+    ev = eval_t2drl(ts, cfg, episodes=2, mods=b.mods,
+                    user_counts=b.user_counts)
+    assert np.isfinite(float(ev["episode_reward"]))
+
+
+def test_scenarios_run_baselines_too():
+    b = build_scenario("flash-crowd", CFG.env, num_envs=2)
+    cfg = dataclasses.replace(CFG, env=b.env, allocator="rcars",
+                              cacher="random")
+    _, hist = train_t2drl(cfg, episodes=2, num_envs=2, mods=b.mods)
+    assert np.all(np.isfinite(np.asarray(hist["episode_reward"])))
+
+
+def test_flash_crowd_concentrates_requests():
+    """A saturating burst (prob 1 every slot) collapses every drawn request
+    onto the hot model, from the very first reset draw."""
+    spec = ModSpec(burst_period=1, burst_width=1, burst_prob=1.0,
+                   burst_model=3)
+    sched = make_schedule(spec, CFG.env)
+    st = env_reset(KEY, CFG.env, schedule_slot_mod(sched, 0))
+    np.testing.assert_array_equal(np.asarray(st.req), 3)
+
+
+# -- composition & registration ------------------------------------------------
+
+def test_compose_stacks_modspecs():
+    c = compose("x", "diurnal", "flash-crowd")
+    spec = c.mods(ModSpec())
+    assert spec.diurnal_period > 0 and spec.burst_period > 0
+    assert c.user_counts is None
+    c2 = compose("y", "flash-crowd", "hetero-cells")
+    assert c2.user_counts is not None
+    b = build_scenario(c, CFG.env, num_envs=2)
+    assert b.mods is not None
+
+
+def test_register_rejects_duplicates():
+    with pytest.raises(ValueError):
+        register(Scenario(name="paper-default", summary="dup"))
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+
+
+def test_mismatched_cell_schedule_is_rejected():
+    b = build_scenario("degraded-channel", CFG.env, num_envs=4)
+    with pytest.raises(ValueError, match="built for 4 cells"):
+        train_t2drl(CFG, episodes=1, num_envs=2, mods=b.mods)
+
+
+def test_rush_hour_is_registered_composition():
+    b = build_scenario("rush-hour", CFG.env, num_envs=4)
+    assert b.mods is not None and b.user_counts is not None
+    assert len(b.user_counts) == 4
+
+
+# -- harness smoke -------------------------------------------------------------
+
+def test_eval_harness_smoke(tmp_path, monkeypatch):
+    import benchmarks.common as common
+    from benchmarks import bench_scenarios
+    monkeypatch.setattr(common, "OUT_DIR", str(tmp_path))
+    out = bench_scenarios.run(
+        scenarios=("paper-default", "flash-crowd"), methods=("rcars",),
+        episodes=2, eval_episodes=2, num_envs=2, env=CFG.env,
+        verbose=False)
+    assert set(out["scenarios"]) == {"paper-default", "flash-crowd"}
+    row = out["scenarios"]["flash-crowd"]["methods"]["rcars"]
+    assert np.isfinite(row["mean_reward"])
+    assert (tmp_path / "scenarios.json").exists()
