@@ -15,16 +15,8 @@ import argparse
 import numpy as np
 
 from repro.core import EnvCfg
-from .common import history_to_list, save_json, train_and_eval
-
-
-def _summary(r: np.ndarray) -> dict:
-    """Final-reward summary; r is (episodes,) or (episodes, B)."""
-    last = r[-10:]
-    out = {"final_reward_mean_last10": float(last.mean())}
-    if r.ndim == 2:
-        out["final_reward_seed_std"] = float(last.mean(axis=0).std())
-    return out
+from .common import (history_to_list, reward_summary, save_json,
+                     train_and_eval)
 
 
 def run(episodes: int = 150, Ls=(1, 5, 10), seed: int = 0,
@@ -38,7 +30,7 @@ def run(episodes: int = 150, Ls=(1, 5, 10), seed: int = 0,
                                   seed=seed, num_envs=num_envs)
         r = np.asarray(hist["episode_reward"])
         out["curves"][f"t2drl_L{L}"] = history_to_list(hist)
-        out[f"t2drl_L{L}"] = {**_summary(r), **ev}
+        out[f"t2drl_L{L}"] = {**reward_summary(r), **ev}
         if verbose:
             print(f"T2DRL L={L:2d}: reward(last10)={r[-10:].mean():9.2f} "
                   f"hit={ev['hit_ratio']:.3f} G={ev['utility']:.2f} "
@@ -49,7 +41,7 @@ def run(episodes: int = 150, Ls=(1, 5, 10), seed: int = 0,
                               num_envs=num_envs)
     r = np.asarray(hist["episode_reward"])
     out["curves"]["ddpg"] = history_to_list(hist)
-    out["ddpg"] = {**_summary(r), **ev}
+    out["ddpg"] = {**reward_summary(r), **ev}
     if verbose:
         print(f"DDPG      : reward(last10)={r[-10:].mean():9.2f} "
               f"hit={ev['hit_ratio']:.3f} G={ev['utility']:.2f} "

@@ -1,0 +1,154 @@
+"""Fleet twin sweep — request-level tail latency per method × scenario.
+
+Trains each method once on the base (paper-default) workload through the
+shared-learner vector-env core, checkpoints the train state, restores it,
+and deploys the restored greedy policy in the request-level queueing twin
+(``repro.fleet``) under every requested scenario's traffic trace.  This is
+the train → save → serve pipeline the slot-level benches cannot exercise,
+and it reports the metrics they cannot see: p50/p95/p99 latency,
+SLO-violation / deadline-miss / drop rates, and queue backlogs.
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet \
+      --scenarios paper-default,flash-crowd --methods t2drl,rcars
+
+Output schema (experiments/bench/fleet.json):
+
+  {"episodes": E, "num_cells": C, "fleet": {<FleetCfg fields>},
+   "sustained_requests_per_min": float,   # warm re-run, compile excluded;
+                                          # absent if every pair skipped
+   "scenarios": {<scenario>: {
+      # a method row is {"skipped": reason} when the scenario transforms
+      # EnvCfg (policy network dims are fixed at train time); otherwise:
+      "summary": str, "user_counts": [..] | null,
+      "methods": {<method>: {
+         "requests": float, "admitted": float, "dropped": float,
+         "truncated": float, "drop_rate": float,
+         "slo_viol_rate": float, "deadline_miss_rate": float,
+         "mean_latency_s": float, "mean_wait_s": float,
+         "p50_s": float, "p95_s": float, "p99_s": float,
+         "mean_backlog_s": float, "peak_backlog_s": float,
+         "peak_queue_depth": float, "end_backlog_s": float,
+         "sim_seconds": float, "wall_s": float,
+         "requests_per_min": float, "ckpt": str}}}}}
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import os
+
+import jax
+
+from repro.checkpoint import load_train_state, save_train_state
+from repro.core import EnvCfg, t2drl_init_batch, train_t2drl
+from repro.fleet import FleetCfg, simulate_fleet
+from repro.scenarios import build_scenario, list_scenarios
+
+from .bench_scenarios import resolve_scenarios
+from .common import OUT_DIR, method_cfg, save_json
+
+METHODS = ("t2drl", "ddpg", "schrs", "rcars")
+
+
+def _row(res):
+    """JSON-safe slice of a ``simulate_fleet`` result: arrays dropped,
+    non-finite values (empty-histogram quantiles) mapped to null so the
+    output stays strict JSON."""
+    drop = ("backlog_curve", "hist", "num_cells")
+    row = {k: float(v) for k, v in res.items() if k not in drop}
+    return {k: (v if math.isfinite(v) else None) for k, v in row.items()}
+
+
+def run(scenarios=("paper-default", "flash-crowd"),
+        methods=("t2drl", "rcars"), episodes: int = 25, num_cells: int = 2,
+        seed: int = 0, env: EnvCfg | None = None,
+        fcfg: FleetCfg = FleetCfg(), ckpt_dir: str | None = None,
+        out_name: str = "fleet.json", verbose: bool = True):
+    """Train → checkpoint → restore → deploy each method across scenarios."""
+    env = env or EnvCfg()
+    scenarios = resolve_scenarios(scenarios)
+    for m in methods:
+        if m not in METHODS:
+            raise SystemExit(f"unknown method {m!r}; expected one of "
+                             f"{METHODS}")
+    reg = list_scenarios()
+    ckpt_dir = ckpt_dir or os.path.join(OUT_DIR, "ckpt")
+    builds = {n: build_scenario(n, env, num_cells) for n in scenarios}
+    out = {"episodes": episodes, "num_cells": num_cells,
+           "fleet": dataclasses.asdict(fcfg),
+           "scenarios": {n: {"summary": reg[n],
+                             "user_counts": (
+                                 None if builds[n].user_counts is None
+                                 else list(builds[n].user_counts)),
+                             "methods": {}} for n in scenarios}}
+    last = None
+    for method in methods:
+        cfg = method_cfg(method, env=env, episodes=episodes, seed=seed,
+                         policy="shared")
+        if method in ("t2drl", "ddpg"):
+            ts, _ = train_t2drl(cfg, episodes=episodes, num_envs=num_cells)
+        else:
+            k_init, _ = jax.random.split(jax.random.PRNGKey(cfg.seed))
+            ts = t2drl_init_batch(k_init, cfg, num_cells)
+        path = save_train_state(
+            os.path.join(ckpt_dir, f"{method}.msgpack"), ts,
+            meta={"method": method, "allocator": cfg.allocator,
+                  "cacher": cfg.cacher, "policy": cfg.policy,
+                  "episodes": episodes, "num_cells": num_cells,
+                  "seed": seed})
+        ts, _ = load_train_state(path)          # deploy from the restore
+        for name in scenarios:
+            b = builds[name]
+            if b.env != env:
+                # policy network dims are fixed at train time; scenarios
+                # that transform the EnvCfg need a retrained policy
+                out["scenarios"][name]["methods"][method] = {
+                    "skipped": "scenario transforms EnvCfg"}
+                continue
+            res = simulate_fleet(ts, cfg, fcfg, num_cells=num_cells,
+                                 seed=seed + 1, mods=b.mods,
+                                 user_counts=b.user_counts)
+            out["scenarios"][name]["methods"][method] = dict(
+                _row(res), ckpt=path)
+            last = (ts, cfg, b)
+            if verbose:
+                print(f"{name:17s} {method:6s}: "
+                      f"p50 {res['p50_s']:7.1f}s p95 {res['p95_s']:7.1f}s "
+                      f"p99 {res['p99_s']:7.1f}s "
+                      f"slo {res['slo_viol_rate']:.3f} "
+                      f"miss {res['deadline_miss_rate']:.3f} "
+                      f"drop {res['drop_rate']:.3f} "
+                      f"req {res['requests']:8.0f}", flush=True)
+    if last is not None:
+        # warm re-run (jit cache hit) = the sustained simulation rate
+        ts, cfg, b = last
+        res = simulate_fleet(ts, cfg, fcfg, num_cells=num_cells,
+                             seed=seed + 1, mods=b.mods,
+                             user_counts=b.user_counts)
+        out["sustained_requests_per_min"] = float(res["requests_per_min"])
+        if verbose:
+            print(f"sustained twin rate: "
+                  f"{res['requests_per_min']:.3g} simulated requests/min")
+    path = save_json(out_name, out)
+    if verbose:
+        print(f"wrote {path}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--scenarios", default="paper-default,flash-crowd",
+                    help="comma list of registry names, or 'all'")
+    ap.add_argument("--methods", default="t2drl,rcars",
+                    help=f"comma list from {METHODS}")
+    ap.add_argument("--episodes", type=int, default=25)
+    ap.add_argument("--num-cells", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(scenarios=args.scenarios.split(","), methods=args.methods.split(","),
+        episodes=args.episodes, num_cells=args.num_cells, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

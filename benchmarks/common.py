@@ -40,11 +40,13 @@ def method_cfg(method: str, *, env: EnvCfg, episodes: int,
 def train_and_eval(method: str, *, env: EnvCfg, episodes: int,
                    eval_episodes: int = 5, L: int = 5, seed: int = 0,
                    num_envs: int = 1, mods=None, user_counts=None,
-                   **overrides):
+                   share_models: bool = False, **overrides):
     """Train (if learning-based) then greedy-eval.  Returns (history, eval).
 
     ``num_envs`` trains B parallel cells through the vectorized core
     (history leaves gain a trailing (B,) axis); eval means over cells.
+    ``share_models=True`` broadcasts cell 0's model zoo to every cell
+    (pure multi-seed runs on one workload, e.g. the Fig. 7 sweep).
     ``mods``/``user_counts`` run a scenario (see ``repro.scenarios`` —
     pass ``build_scenario(...).mods`` / ``.user_counts`` together with its
     transformed ``.env``); both the learned methods and the SCHRS/RCARS
@@ -54,14 +56,16 @@ def train_and_eval(method: str, *, env: EnvCfg, episodes: int,
     t0 = time.time()
     if method in ("t2drl", "ddpg"):
         ts, hist = train_t2drl(cfg, episodes=episodes, num_envs=num_envs,
-                               mods=mods, user_counts=user_counts)
+                               mods=mods, user_counts=user_counts,
+                               share_models=share_models)
     else:
         # same init-key derivation as train_t2drl, so the non-learning
         # baselines run on the SAME model zoos as the learning methods
         # (cross-method deltas then measure the algorithm, not zoo luck)
         k_init, _ = jax.random.split(jax.random.PRNGKey(cfg.seed))
         ts = (t2drl_init(k_init, cfg) if num_envs == 1
-              else t2drl_init_batch(k_init, cfg, num_envs))
+              else t2drl_init_batch(k_init, cfg, num_envs,
+                                    share_models=share_models))
         hist = None
     ev = eval_t2drl(ts, cfg, episodes=eval_episodes, mods=mods,
                     user_counts=user_counts)
@@ -82,3 +86,14 @@ def history_to_list(hist):
     if hist is None:
         return None
     return {k: np.asarray(v).tolist() for k, v in hist.items()}
+
+
+def reward_summary(r) -> dict:
+    """Final-training-reward summary shared by the benches.  ``r`` is the
+    ``episode_reward`` history, (episodes,) or (episodes, B); the batched
+    layout adds the cross-cell (multi-seed) spread of the last-10 mean."""
+    last = np.asarray(r)[-10:]
+    out = {"final_reward_mean_last10": float(last.mean())}
+    if last.ndim == 2:
+        out["final_reward_seed_std"] = float(last.mean(axis=0).std())
+    return out

@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: convergence,users,cache,runtime,"
-                         "roofline,scenarios")
+                         "roofline,scenarios,fleet")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     episodes = 500 if args.full else 60
@@ -56,6 +56,13 @@ def main() -> None:
         from . import bench_scenarios
         bench_scenarios.run(episodes=episodes, num_envs=2 if not args.full
                             else 4)
+    if want("fleet"):
+        print("\n== fleet twin: request-level tail latency ==", flush=True)
+        from . import bench_fleet
+        bench_fleet.run(scenarios=("all",) if args.full
+                        else ("paper-default", "flash-crowd"),
+                        episodes=episodes,
+                        num_cells=4 if args.full else 2)
     print(f"\nall benchmarks done in {time.time() - t0:.0f}s "
           f"(results in experiments/bench/)")
 

@@ -1,1 +1,2 @@
 from .msgpack_ckpt import bf16_safe_cast, load_pytree, save_pytree  # noqa: F401
+from .train_state import load_train_state, save_train_state  # noqa: F401

@@ -1,0 +1,118 @@
+"""RL train-state checkpointing (DESIGN.md §11: train → save → serve).
+
+``save_train_state`` / ``load_train_state`` wrap the msgpack pytree codec
+for the dict pytrees produced by ``repro.core.train_t2drl`` (and the policy
+slices from ``export_policy``).  Two things the raw codec cannot do alone:
+
+- ``ModelParams`` is a NamedTuple; the codec would round-trip it as a plain
+  tuple and drop field access.  Known NamedTuple leaves are converted to
+  tagged dicts on save and rebuilt on load, so a restored state is
+  bit-identical *and* type-identical to the saved one.
+- A checkpoint carries a small JSON-safe ``meta`` map (format version plus
+  caller-supplied fields such as allocator/cacher/seed) so a serving
+  process can sanity-check what it restored before deploying it.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import msgpack
+
+from .msgpack_ckpt import _pack, _unpack
+
+FORMAT_VERSION = 1
+# NamedTuples are encoded as single-entry dicts {"__nt__:<Name>": fields};
+# the tag rides in the *key* (map keys pass through the leaf codec verbatim,
+# whereas a string value would be mangled into a unicode array).
+_NT_TAG = "__nt__:"
+
+
+def _nt_registry():
+    # imported lazily: repro.core pulls in the whole agent stack, which the
+    # LM-side checkpoint users of this package do not need at import time
+    from repro.core import ModelParams
+    return {"ModelParams": ModelParams}
+
+
+def _encode(node):
+    """Replace registered NamedTuples with tagged dicts (recursively)."""
+    for name, cls in _nt_registry().items():
+        if isinstance(node, cls):
+            return {_NT_TAG + name: {k: _encode(v)
+                                     for k, v in node._asdict().items()}}
+    if isinstance(node, dict):
+        return {k: _encode(v) for k, v in node.items()}
+    if isinstance(node, tuple) and hasattr(node, "_fields"):
+        # an unregistered NamedTuple would otherwise round-trip as a bare
+        # tuple (losing field access) or crash the generic rebuild below
+        raise TypeError(
+            f"unregistered NamedTuple {type(node).__name__!r} in the "
+            f"checkpoint tree; add it to train_state._nt_registry")
+    if isinstance(node, (list, tuple)):
+        return type(node)(_encode(v) for v in node)
+    return node
+
+
+def _decode(node):
+    if isinstance(node, dict):
+        if len(node) == 1:
+            (key, fields), = node.items()
+            if isinstance(key, str) and key.startswith(_NT_TAG):
+                cls = _nt_registry()[key[len(_NT_TAG):]]
+                return cls(**{k: _decode(v) for k, v in fields.items()})
+        return {k: _decode(v) for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return type(node)(_decode(v) for v in node)
+    return node
+
+
+def save_train_state(path: str, ts: Any,
+                     meta: Optional[Dict[str, Any]] = None) -> str:
+    """Checkpoint a train-state (or policy) pytree to ``path``.
+
+    Parameters
+    ----------
+    path : str
+        Destination file (parent directories are created; the write is
+        atomic via a same-directory temp file).
+    ts : dict
+        Any pytree of arrays/dicts/lists/tuples, including ``ModelParams``
+        leaves — e.g. the state from ``train_t2drl`` or the policy from
+        ``export_policy``.
+    meta : dict, optional
+        JSON-safe scalars/strings describing the run (allocator, cacher,
+        seed, episodes, ...).  Stored next to the state and returned by
+        ``load_train_state``.
+
+    Returns
+    -------
+    str
+        The path written.
+    """
+    payload = {"format": FORMAT_VERSION, "meta": dict(meta or {}),
+               "state": _pack(_encode(ts))}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+    return path
+
+
+def load_train_state(path: str):
+    """Restore a checkpoint written by ``save_train_state``.
+
+    Returns
+    -------
+    (Any, dict)
+        ``(state, meta)`` — the state pytree with NamedTuple leaves (e.g.
+        ``ModelParams``) reconstructed, and the meta map saved alongside.
+    """
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    fmt = payload.get("format")
+    if fmt != FORMAT_VERSION:
+        raise ValueError(f"unsupported train-state checkpoint format {fmt!r} "
+                         f"(expected {FORMAT_VERSION}) in {path}")
+    return _decode(_unpack(payload["state"])), payload.get("meta", {})

@@ -19,5 +19,6 @@ from .baselines import (GACfg, ga_allocate, random_cache,  # noqa: F401
                         random_cache_batch, rcars_allocate,
                         static_popular_cache, static_popular_cache_batch)
 from .t2drl import (T2DRLCfg, episode_epsilon, episode_sigma,  # noqa: F401
-                    eval_t2drl, run_episode, run_eval, run_training,
+                    eval_t2drl, export_policy, greedy_frame_cache,
+                    greedy_slot_action, run_episode, run_eval, run_training,
                     t2drl_init, t2drl_init_batch, train_t2drl)

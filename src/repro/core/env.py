@@ -246,12 +246,19 @@ def _channel_gain(key, pos, cfg: EnvCfg):
     return g * rayleigh2
 
 
-def _sample_requests(key, gamma_idx, cfg: EnvCfg):
-    """Zipf over model ids, Eq. (1)."""
+def zipf_logits(gamma_idx, cfg: EnvCfg):
+    """Unnormalized log-weights of the Eq. (1) Zipf popularity over model
+    ids for skewness state ``gamma_idx`` — the single source of truth for
+    both the env's request sampler and the fleet twin's arrival mix."""
     gamma = jnp.asarray(cfg.gammas)[gamma_idx]
     ranks = jnp.arange(1, cfg.M + 1, dtype=jnp.float32)
-    logits = -gamma * jnp.log(ranks)
-    return jax.random.categorical(key, logits, shape=(cfg.U,))
+    return -gamma * jnp.log(ranks)
+
+
+def _sample_requests(key, gamma_idx, cfg: EnvCfg):
+    """Zipf over model ids, Eq. (1)."""
+    return jax.random.categorical(key, zipf_logits(gamma_idx, cfg),
+                                  shape=(cfg.U,))
 
 
 def _sample_markov(key, idx, P):
@@ -376,18 +383,25 @@ def env_new_frame(state: EnvState, cfg: EnvCfg, rho, P_gamma=None,
 
 # -- slot dynamics (Eqs. 2-10, 23) --------------------------------------------
 
+def radio_rates(h, b, cfg: EnvCfg):
+    """Eqs. (2)/(5): per-user uplink rate under bandwidth shares ``b`` and
+    the (share-independent) downlink rate, for channel gains ``h``.  The
+    single source of truth for the radio model — used by ``slot_metrics``
+    and by the fleet twin's pre-observation service estimates."""
+    snr_up = cfg.p_user * h / (cfg.n0 * b * cfg.W_up)
+    r_up = b * cfg.W_up * jnp.log2(1.0 + snr_up)
+    snr_dw = cfg.p_bs * h / (cfg.n0 * cfg.W_dw)
+    r_dw = cfg.W_dw * jnp.log2(1.0 + snr_dw)
+    return r_up, r_dw
+
+
 def slot_metrics(state: EnvState, cfg: EnvCfg, models: ModelParams, b, xi):
     """Compute per-user delay/quality/utility for allocation (b, xi)."""
     cached = state.rho[state.req]                      # (U,) 0/1
     b = jnp.maximum(b, 1e-9)
-    # Eq. (2): uplink rate
-    snr_up = cfg.p_user * state.h / (cfg.n0 * b * cfg.W_up)
-    r_up = b * cfg.W_up * jnp.log2(1.0 + snr_up)
+    r_up, r_dw = radio_rates(state.h, b, cfg)
     # Eq. (4): upload delay (+ backhaul if not cached)
     d_up = state.d_in / r_up + (1.0 - cached) * state.d_in / cfg.r_bc
-    # Eq. (5): downlink rate
-    snr_dw = cfg.p_bs * state.h / (cfg.n0 * cfg.W_dw)
-    r_dw = cfg.W_dw * jnp.log2(1.0 + snr_dw)
     d_op = models.d_op[state.req]
     # Eq. (6): feedback delay
     d_dw = d_op / r_dw + (1.0 - cached) * d_op / cfg.r_cb

@@ -677,3 +677,78 @@ def eval_t2drl(ts, cfg: T2DRLCfg, *, episodes: int = 10, seed: int = 10_000,
     stats = run_eval(ts, cfg, jax.random.PRNGKey(seed),
                      jnp.arange(episodes), masks, _broadcast_mods(mods, B))
     return {k: jnp.mean(v) for k, v in stats.items()}
+
+
+# -- policy deployment (inference-only, DESIGN.md §11) ------------------------
+#
+# ``export_policy`` slices the learner-free parameters out of a train state
+# so a trained policy can be checkpointed (repro.checkpoint.save_train_state)
+# and served — e.g. by the request-level fleet twin (repro.fleet) — without
+# dragging replay buffers, target networks, or optimizer moments along.
+# ``greedy_slot_action`` / ``greedy_frame_cache`` are the single-env greedy
+# inference entry points every allocator/cacher combination shares.
+
+
+def export_policy(ts, cfg: T2DRLCfg, cell: int = 0):
+    """Extract the inference-only policy pytree from a train state.
+
+    Parameters
+    ----------
+    ts : dict
+        Train state — legacy single-env layout or batched (leading ``(B,)``
+        axis) as returned by ``train_t2drl(..., num_envs=B)``.
+    cfg : T2DRLCfg
+        The configuration the state was trained under (selects which agent
+        parameters exist).
+    cell : int
+        For batched *independent*-policy states, which cell's learner to
+        export.  Shared-policy states have a single learner; ``cell`` is
+        then ignored and the shared parameters are taken as-is.
+
+    Returns
+    -------
+    dict
+        ``{"actor": ..., "ddqn": {"q": ...}}`` with keys present only for
+        the learned components of ``cfg`` (empty dict for RCARS/SCHRS).
+        Model zoos are *not* included — they are environment state, passed
+        to the twin separately.
+    """
+    batched_agents = (ts["models"].a1.ndim == 2 and cfg.policy != "shared")
+    take = ((lambda x: jax.tree.map(lambda v: v[cell], x))
+            if batched_agents else (lambda x: x))
+    pol = {}
+    if cfg.allocator in ("d3pg", "ddpg"):
+        pol["actor"] = take(ts["d3pg"]["actor"])
+    if cfg.cacher == "ddqn":
+        pol["ddqn"] = {"q": take(ts["ddqn"]["q"])}
+    return pol
+
+
+def greedy_slot_action(policy, cfg: T2DRLCfg, env: EnvState,
+                       models: ModelParams, key, mask=None):
+    """Greedy (no exploration noise) per-slot allocation for any allocator.
+
+    Returns the amended ``(b, xi)`` exactly as the training-time slot step
+    would under ``sigma = 0``; ``key`` drives the diffusion actor's reverse
+    chain (D3PG) or the GA (SCHRS)."""
+    if cfg.allocator in ("d3pg", "ddpg"):
+        d3 = cfg.d3pg_cfg()
+        sched = make_actor_schedule(d3)
+        s = observe(env, cfg.env, models, mask)
+        raw = actor_act(policy["actor"], d3, sched, s, key)
+        return amend_actions(raw, env.req, env.rho, cfg.env.U, mask=mask)
+    if cfg.allocator == "schrs":
+        return ga_allocate(key, env, cfg.env, models, cfg.ga)
+    return rcars_allocate(env, cfg.env)
+
+
+def greedy_frame_cache(policy, cfg: T2DRLCfg, models: ModelParams,
+                       gamma_idx, key):
+    """Greedy (eps = 0) per-frame caching vector rho for any cacher."""
+    if cfg.cacher == "ddqn":
+        dq = cfg.ddqn_cfg()
+        a_int = ddqn_act(policy["ddqn"], dq, gamma_idx, key, 0.0)
+        return amend_caching(a_int, dq, models.c, cfg.env.C)
+    if cfg.cacher == "static":
+        return static_popular_cache(models, cfg.env)
+    return random_cache(key, models, cfg.env)

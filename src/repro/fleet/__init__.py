@@ -1,0 +1,4 @@
+"""Request-level edge-fleet serving twin (DESIGN.md §11): jitted queueing
+simulator with tail-latency SLOs, driven by checkpointed greedy policies."""
+from .twin import (FleetCfg, fleet_run, latency_quantiles,  # noqa: F401
+                   simulate_fleet, summarize_fleet)

@@ -1,0 +1,395 @@
+"""Fleet-scale request-level serving twin (DESIGN.md §11).
+
+The training env scores a policy by *slot-averaged* analytic delay (paper
+Eqs. 7-8); it cannot show queueing backlogs, p95/p99 tails, or SLO
+violations — the metrics that decide whether an edge deployment survives
+real traffic.  This module is the missing request-level lens: a fully
+jitted queueing "digital twin" that replays a trained (checkpointed)
+policy against Poisson request traffic and measures per-request latency.
+
+Model:
+
+- Each edge cell runs one FIFO queue per GenAI model.  A queue is a
+  Lindley recursion over *unfinished work* ``W`` (seconds): an arrival
+  with service time ``s`` entering a queue with backlog ``W`` waits ``W``
+  seconds, so per-request latency decomposes exactly into
+  ``queueing (W + (k-1)·s for the k-th same-tick arrival) + transmission
+  (uplink + downlink) + compute (s)``.
+- Service/transmission times per (cell, model) come from the *policy*:
+  each slot the restored greedy policy allocates ``(b, xi)`` exactly as at
+  training time; the env's ``slot_metrics`` maps that to per-user delays,
+  which are averaged per requested model.  Models nobody requested in a
+  slot keep their last observed service point (cloud-fallback estimate
+  before first observation).
+- Uncached models (``rho_m = 0``) take the cloud path: no edge queue
+  (the cloud is capacity-unbounded here), latency = backhaul-inclusive
+  transmission + cloud compute, exactly the paper's Sec. 3.4 fallback.
+  Residual edge backlog of an evicted model keeps draining.
+- Arrivals are Poisson per (cell, model, tick): total rate
+  ``arrivals_per_user_s x active users``, split across models by the
+  current popularity state's Zipf mix, reshaped by the scenario schedule
+  (``burst_prob`` mass onto the hot model, ``din_scale`` as the offered-
+  load multiplier, ``P_gamma`` drift, per-cell ``user_counts``) — every
+  registered scenario is also a traffic trace.
+- Metrics stream into fixed-bin latency histograms (scan-safe; quantiles
+  are recovered host-side), plus SLO-violation / deadline-miss / drop
+  counters and per-slot backlog curves.
+
+Everything advances through a ``lax.scan`` over ticks nested in the slot
+and frame scans, vmapped over cells — millions of simulated requests are
+one compiled call, cheap even on a 2-core CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (T2DRLCfg, export_policy, greedy_frame_cache,
+                        greedy_slot_action, make_user_masks, masked_mean)
+from repro.core.env import (MB_BITS, env_advance_frame, env_reset,
+                            env_set_cache, env_step_slot, radio_rates,
+                            schedule_frame_P, schedule_slot_mod, zipf_logits)
+from repro.core.quality import cloud_delay
+from repro.core.t2drl import _batch_keys, _broadcast_mods
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetCfg:
+    """Static twin configuration (hashable -> jit-static).
+
+    Attributes
+    ----------
+    ticks_per_slot : int
+        Queue ticks per env slot; the tick duration is ``tau /
+        ticks_per_slot`` seconds.  Arrivals/admissions/drains happen per
+        tick, allocations per slot, caching per frame.
+    arrivals_per_user_s : float
+        Poisson request rate per active user (requests/second).
+    max_arrivals : int
+        Per-(cell, model, tick) arrival truncation bound (keeps the
+        per-request latency expansion a fixed shape).  Truncated arrivals
+        are counted in ``truncated``, never silently dropped.
+    queue_cap : float
+        Per-(cell, model) queue capacity in *requests* (backlog depth
+        ``W/s``); arrivals beyond it are dropped and counted.
+    slo : float
+        End-to-end latency SLO (seconds) on queueing + transmission +
+        compute.  The paper's deadline ``tau`` is still reported
+        separately on the service-level delay (transmission + compute,
+        no queueing) as ``deadline_miss`` — the twin's new information is
+        exactly the gap between the two.
+    hist_bins, hist_max : int, float
+        Fixed latency histogram: ``hist_bins`` equal bins on
+        ``[0, hist_max)`` seconds; the last bin absorbs overflow (a
+        quantile landing there is reported as ``hist_max``).
+    """
+    ticks_per_slot: int = 20
+    arrivals_per_user_s: float = 0.01
+    max_arrivals: int = 8
+    queue_cap: float = 64.0
+    slo: float = 40.0
+    hist_bins: int = 256
+    hist_max: float = 240.0
+
+
+def _zipf_mix(gamma_idx, cfg):
+    """(M,) Zipf popularity mix of the current skewness state — the same
+    Eq. (1) distribution the env samples requests from."""
+    return jax.nn.softmax(zipf_logits(gamma_idx, cfg))
+
+
+def _cell_episode(policy, tcfg: T2DRLCfg, fcfg: FleetCfg, models, key,
+                  mask=None, mods=None):
+    """One episode horizon of request-level serving for a single cell.
+
+    Returns ``(counts, hist, curves)``: scalar counters, the (hist_bins,)
+    latency histogram, and per-slot ``{backlog, depth}`` curves of shape
+    ``(T, K)``."""
+    env_cfg = tcfg.env
+    M, U = env_cfg.M, env_cfg.U
+    dt = env_cfg.tau / fcfg.ticks_per_slot
+    n_active = jnp.float32(U) if mask is None else jnp.sum(mask)
+    A = fcfg.max_arrivals
+    arange_k = jnp.arange(1, A + 1, dtype=jnp.float32)       # (A,)
+
+    k_env, key = jax.random.split(key)
+    env = env_reset(k_env, env_cfg, schedule_slot_mod(mods, 0))
+
+    # cloud-fallback service point until a model is first observed: cloud
+    # compute plus backhaul-inclusive transmission, with the radio legs
+    # estimated at the equal bandwidth split (Eqs. 2/5 with b = 1/U) over
+    # the reset slot's channel draws — the same rate model slot_metrics
+    # applies to uncached users, so never-requested tail models are scored
+    # on the full uplink + backhaul + downlink path, not backhaul alone
+    d_in_mean = 0.5 * (env_cfg.d_in_mb[0] + env_cfg.d_in_mb[1]) * MB_BITS
+    r_up0, r_dw0 = radio_rates(env.h, jnp.full((U,), 1.0 / U), env_cfg)
+    qs0 = {"work": jnp.zeros(M),
+           "serv": cloud_delay(models.a3, models.b1, models.b2),
+           "trans": masked_mean(env.d_in / r_up0, mask)
+           + d_in_mean / env_cfg.r_bc
+           + models.d_op * (masked_mean(1.0 / r_dw0, mask)
+                            + 1.0 / env_cfg.r_cb)}
+    # request counters and histogram bins accumulate in int32 (exact up to
+    # ~2.1e9 per cell per run — f32 would silently stop counting at ~2^24);
+    # the latency/wait sums stay f32, they only feed means
+    counts0 = {k: jnp.int32(0) for k in
+               ("arrivals", "admitted", "dropped", "truncated", "slo_viol",
+                "deadline_miss")}
+    counts0.update(lat_sum=jnp.float32(0.0), wait_sum=jnp.float32(0.0))
+    hist0 = jnp.zeros(fcfg.hist_bins, jnp.int32)
+
+    def slot_step(carry, xs):
+        k_slot, g = xs
+        env, qs, counts, hist = carry
+        ka, kt = jax.random.split(k_slot)
+        b, xi = greedy_slot_action(policy, tcfg, env, models, ka, mask)
+        env1, _, m = env_step_slot(env, env_cfg, models, b, xi, mask,
+                                   schedule_slot_mod(mods, g + 1))
+        # per-model service point observed from this slot's allocation
+        w = jax.nn.one_hot(env.req, M)                        # (U, M)
+        if mask is not None:
+            w = w * mask[:, None]
+        cnt = jnp.sum(w, axis=0)                              # (M,)
+        safe = jnp.maximum(cnt, 1.0)
+        serv = jnp.where(cnt > 0, (w.T @ m["delay_gt"]) / safe, qs["serv"])
+        trans = jnp.where(cnt > 0,
+                          (w.T @ (m["delay_up"] + m["delay_dw"])) / safe,
+                          qs["trans"])
+        # arrival mix for this slot: Zipf(gamma) reshaped by the scenario
+        p = _zipf_mix(env.gamma_idx, env_cfg)
+        rate_scale = jnp.float32(1.0)
+        mod_g = schedule_slot_mod(mods, g)
+        if mod_g is not None:
+            p = ((1.0 - mod_g.burst_prob) * p
+                 + mod_g.burst_prob * jax.nn.one_hot(mod_g.burst_model, M))
+            rate_scale = mod_g.din_scale
+        rate = (fcfg.arrivals_per_user_s * n_active * rate_scale * dt) * p
+        cached = env.rho                                      # (M,) 0/1
+
+        def tick(tick_carry, k_tick):
+            work, counts, hist = tick_carry
+            n_raw = jax.random.poisson(k_tick, rate).astype(jnp.float32)
+            n = jnp.minimum(n_raw, float(A))
+            depth = work / jnp.maximum(serv, 1e-6)
+            room = jnp.floor(jnp.maximum(fcfg.queue_cap - depth, 0.0))
+            adm = jnp.where(cached > 0, jnp.minimum(n, room), n)  # (M,)
+            # k-th same-tick admission: queue wait work + (k-1)*serv
+            valid = arange_k[None, :] <= adm[:, None]         # (M, A)
+            wait = jnp.where(cached[:, None] > 0,
+                             work[:, None] + (arange_k[None, :] - 1.0)
+                             * serv[:, None], 0.0)
+            lat = trans[:, None] + wait + serv[:, None]       # (M, A)
+            v = valid.astype(jnp.float32)
+            idx = jnp.clip((lat / fcfg.hist_max
+                            * fcfg.hist_bins).astype(jnp.int32),
+                           0, fcfg.hist_bins - 1)
+            hist = hist.at[idx.ravel()].add(valid.astype(jnp.int32).ravel())
+            d_service = trans + serv                          # no queueing
+            i32 = lambda x: jnp.round(x).astype(jnp.int32)  # exact: x integral
+            counts = {
+                "arrivals": counts["arrivals"] + i32(jnp.sum(n)),
+                "admitted": counts["admitted"] + i32(jnp.sum(adm)),
+                "dropped": counts["dropped"]
+                + i32(jnp.sum(jnp.where(cached > 0, n - adm, 0.0))),
+                "truncated": counts["truncated"] + i32(jnp.sum(n_raw - n)),
+                "slo_viol": counts["slo_viol"]
+                + jnp.sum((valid & (lat > fcfg.slo)).astype(jnp.int32)),
+                "deadline_miss": counts["deadline_miss"]
+                + i32(jnp.sum(adm * (d_service > env_cfg.tau))),
+                "lat_sum": counts["lat_sum"] + jnp.sum(v * lat),
+                "wait_sum": counts["wait_sum"] + jnp.sum(v * wait),
+            }
+            work = jnp.maximum(
+                work + jnp.where(cached > 0, adm * serv, 0.0) - dt, 0.0)
+            return (work, counts, hist), None
+
+        (work, counts, hist), _ = jax.lax.scan(
+            tick, (qs["work"], counts, hist),
+            jax.random.split(kt, fcfg.ticks_per_slot))
+        qs = {"work": work, "serv": serv, "trans": trans}
+        # depth: deepest single (cell, model) queue — the quantity the
+        # per-queue queue_cap admission bound actually applies to
+        ys = {"backlog": jnp.sum(work),
+              "depth": jnp.max(work / jnp.maximum(serv, 1e-6))}
+        return (env1, qs, counts, hist), ys
+
+    def frame_step(carry, xs):
+        k_frame, t = xs
+        env, qs, counts, hist = carry
+        kf = jax.random.split(k_frame, 3)
+        env = env_advance_frame(env, env_cfg, schedule_frame_P(mods, t),
+                                schedule_slot_mod(mods, t * env_cfg.K))
+        rho = greedy_frame_cache(policy, tcfg, models, env.gamma_idx, kf[0])
+        env = env_set_cache(env, rho)
+        (env, qs, counts, hist), ys = jax.lax.scan(
+            slot_step, (env, qs, counts, hist),
+            (jax.random.split(kf[1], env_cfg.K),
+             t * env_cfg.K + jnp.arange(env_cfg.K)))
+        return (env, qs, counts, hist), ys
+
+    (_, qs, counts, hist), curves = jax.lax.scan(
+        frame_step, (env, qs0, counts0, hist0),
+        (jax.random.split(key, env_cfg.T), jnp.arange(env_cfg.T)))
+    counts["end_backlog"] = jnp.sum(qs["work"])
+    return counts, hist, curves
+
+
+@functools.partial(jax.jit, static_argnames=("tcfg", "fcfg"))
+def fleet_run(policy, models, tcfg: T2DRLCfg, fcfg: FleetCfg, keys,
+              masks=None, mods=None):
+    """Simulate one episode horizon for C cells (vmapped ``_cell_episode``).
+
+    ``policy`` is shared across cells (deployment: one trained policy
+    serves the fleet); ``models``/``keys``/``masks``/``mods`` carry a
+    leading ``(C,)`` axis.  Returns per-cell ``(counts, hist, curves)``."""
+    return jax.vmap(
+        lambda mo, k, mk, md: _cell_episode(policy, tcfg, fcfg, mo, k,
+                                            mask=mk, mods=md))(
+        models, keys, masks, mods)
+
+
+def latency_quantiles(hist, hist_max: float, qs: Sequence[float] = (0.5,
+                      0.95, 0.99)):
+    """Recover latency quantiles from a fixed-bin histogram (host-side).
+
+    Linear interpolation inside the containing bin; a quantile landing in
+    the overflow (last) bin is reported as ``hist_max``.  Returns
+    ``{q: seconds}`` (NaN when the histogram is empty)."""
+    hist = np.asarray(hist, np.float64)
+    edges = np.linspace(0.0, hist_max, hist.size + 1)
+    total = hist.sum()
+    c = np.cumsum(hist)
+    out = {}
+    for q in qs:
+        if total <= 0:
+            out[q] = float("nan")
+            continue
+        target = q * total
+        i = int(np.searchsorted(c, target))
+        i = min(i, hist.size - 1)
+        if i == hist.size - 1:
+            out[q] = float(hist_max)
+            continue
+        prev = c[i - 1] if i > 0 else 0.0
+        frac = (target - prev) / max(hist[i], 1e-12)
+        out[q] = float(edges[i] + frac * (edges[i + 1] - edges[i]))
+    return out
+
+
+def simulate_fleet(ts, tcfg: T2DRLCfg, fcfg: FleetCfg = FleetCfg(), *,
+                   num_cells: Optional[int] = None, seed: int = 0,
+                   mods=None, user_counts: Optional[Sequence[int]] = None,
+                   policy=None, cell: int = 0):
+    """Deploy a trained (or restored) policy against request-level traffic.
+
+    Parameters
+    ----------
+    ts : dict
+        Train state from ``train_t2drl`` or ``repro.checkpoint.
+        load_train_state`` — single or batched layout.  Only the model
+        zoo and the inference parameters are used (``export_policy``).
+    tcfg : T2DRLCfg
+        The configuration the policy was trained under (allocator/cacher
+        selection and the env the twin derives delays from).
+    fcfg : FleetCfg
+        Queueing-twin configuration.
+    num_cells : int, optional
+        Fleet size C.  An unbatched ``ts`` is replicated to C cells
+        (same zoo, independent traffic); a batched ``ts`` fixes C to its
+        own cell count.
+    seed : int
+        PRNG seed for traffic and policy sampling (cell keys follow the
+        training-core ``_batch_keys`` convention).
+    mods : ScenarioSchedule, optional
+        Scenario schedule (``build_scenario(...).mods``) — the traffic
+        trace.  Unbatched leaves broadcast to all cells.
+    user_counts : sequence of int, optional
+        Per-cell active-user populations (scales each cell's offered
+        load and masks its allocations).
+    policy : dict, optional
+        Pre-exported policy pytree (skips ``export_policy``).
+    cell : int
+        Deployment is always ONE policy serving the whole fleet; for a
+        batched *independent*-policy train state (B separate learners)
+        this selects which cell's learner is deployed fleet-wide — the
+        others are not consulted.  Ignored for shared-policy and
+        unbatched states.
+
+    Returns
+    -------
+    dict
+        Fleet-level metrics: request counts and rates (``slo_viol_rate``,
+        ``deadline_miss_rate``, ``drop_rate``), latency ``p50``/``p95``/
+        ``p99`` + mean latency/wait, backlog stats and per-cell
+        ``backlog_curve`` (C, T*K), the summed histogram, simulated
+        seconds, wall seconds of this call and the derived
+        ``requests_per_min`` (call twice and read the second for a
+        compile-free sustained rate).
+    """
+    models = ts["models"]
+    batched = models.a1.ndim == 2
+    pol = export_policy(ts, tcfg, cell=cell) if policy is None else policy
+    if batched:
+        B = models.a1.shape[0]
+        if num_cells is not None and num_cells != B:
+            raise ValueError(f"ts is batched over {B} cells; "
+                             f"num_cells={num_cells} does not match")
+        num_cells = B
+    else:
+        num_cells = num_cells or 1
+        models = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (num_cells,) + x.shape), models)
+    masks = None
+    if user_counts is not None:
+        if len(user_counts) != num_cells:
+            raise ValueError("user_counts must have one entry per cell")
+        masks = make_user_masks(tcfg.env, user_counts)
+    mods = _broadcast_mods(mods, num_cells)
+    keys = _batch_keys(jax.random.PRNGKey(seed), num_cells)
+    t0 = time.perf_counter()
+    counts, hist, curves = jax.block_until_ready(
+        fleet_run(pol, models, tcfg, fcfg, keys, masks, mods))
+    wall = time.perf_counter() - t0
+    return summarize_fleet(counts, hist, curves, tcfg, fcfg, wall)
+
+
+def summarize_fleet(counts, hist, curves, tcfg: T2DRLCfg, fcfg: FleetCfg,
+                    wall_s: float):
+    """Reduce per-cell twin outputs to the fleet-level metric dict."""
+    c = {k: float(np.sum(np.asarray(v))) for k, v in counts.items()}
+    hist_all = np.sum(np.asarray(hist), axis=0)
+    q = latency_quantiles(hist_all, fcfg.hist_max)
+    backlog = np.asarray(curves["backlog"])          # (C, T, K)
+    C = backlog.shape[0]
+    backlog = backlog.reshape(C, -1)
+    depth = np.asarray(curves["depth"]).reshape(C, -1)
+    adm = max(c["admitted"], 1.0)
+    sim_s = tcfg.env.T * tcfg.env.K * tcfg.env.tau
+    return {
+        "num_cells": C,
+        "sim_seconds": float(sim_s),
+        "requests": c["arrivals"],
+        "admitted": c["admitted"],
+        "dropped": c["dropped"],
+        "truncated": c["truncated"],
+        "drop_rate": c["dropped"] / max(c["arrivals"], 1.0),
+        "slo_viol_rate": c["slo_viol"] / adm,
+        "deadline_miss_rate": c["deadline_miss"] / adm,
+        "mean_latency_s": c["lat_sum"] / adm,
+        "mean_wait_s": c["wait_sum"] / adm,
+        "p50_s": q[0.5], "p95_s": q[0.95], "p99_s": q[0.99],
+        "end_backlog_s": c["end_backlog"],
+        "mean_backlog_s": float(backlog.mean()),
+        "peak_backlog_s": float(backlog.max()),
+        "peak_queue_depth": float(depth.max()),
+        "backlog_curve": backlog,
+        "hist": hist_all,
+        "wall_s": wall_s,
+        "requests_per_min": c["arrivals"] / max(wall_s, 1e-9) * 60.0,
+    }
