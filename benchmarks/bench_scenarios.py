@@ -52,9 +52,17 @@ def resolve_scenarios(names) -> list:
 def run(scenarios=("all",), methods=("t2drl", "rcars"), episodes: int = 25,
         eval_episodes: int = 5, num_envs: int = 2, seed: int = 0,
         policy: str = "shared", env: EnvCfg | None = None,
-        out_name: str = "scenarios.json", verbose: bool = True):
-    """Sweep scenarios × methods; returns (and saves) the breakdown dict."""
+        out_name: str = "scenarios.json", verbose: bool = True,
+        cfg_overrides: dict | None = None):
+    """Sweep scenarios × methods; returns (and saves) the breakdown dict.
+
+    ``cfg_overrides`` maps extra ``T2DRLCfg`` fields onto the learned
+    methods — e.g. the exploration / learning-rate schedules
+    (``eps_schedule``, ``lr_schedule``, ``lr_warmdown_episodes``,
+    ``lr_end_scale``) the long-horizon convergence preset tunes
+    (DESIGN.md §12)."""
     env = env or EnvCfg()
+    cfg_overrides = dict(cfg_overrides or {})
     scenarios = resolve_scenarios(scenarios)
     for method in methods:
         if method not in METHODS:
@@ -62,7 +70,8 @@ def run(scenarios=("all",), methods=("t2drl", "rcars"), episodes: int = 25,
                              f"expected one of {METHODS}")
     reg = list_scenarios()
     out = {"episodes": episodes, "num_envs": num_envs, "policy": policy,
-           "eval_episodes": eval_episodes, "scenarios": {}}
+           "eval_episodes": eval_episodes,
+           "cfg_overrides": cfg_overrides, "scenarios": {}}
     for name in scenarios:
         b = build_scenario(name, env, num_envs)
         row = {"summary": reg[name],
@@ -73,7 +82,8 @@ def run(scenarios=("all",), methods=("t2drl", "rcars"), episodes: int = 25,
             hist, ev = train_and_eval(
                 method, env=b.env, episodes=episodes,
                 eval_episodes=eval_episodes, seed=seed, num_envs=num_envs,
-                mods=b.mods, user_counts=b.user_counts, policy=policy)
+                mods=b.mods, user_counts=b.user_counts, policy=policy,
+                **cfg_overrides)
             if hist is not None:
                 r = np.asarray(hist["episode_reward"])
                 ev["final_reward_mean_last10"] = float(r[-10:].mean())
@@ -109,11 +119,25 @@ def main():
                     choices=("independent", "shared"),
                     help="vector-env mode for the learned methods")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eps-schedule", default="linear",
+                    choices=("linear", "cosine"),
+                    help="epsilon/sigma decay shape (T2DRLCfg.eps_schedule)")
+    ap.add_argument("--lr-schedule", default="const",
+                    choices=("const", "linear", "cosine"),
+                    help="actor/critic LR warmdown shape")
+    ap.add_argument("--lr-warmdown-episodes", type=int, default=0,
+                    help="LR warmdown horizon in episodes")
+    ap.add_argument("--lr-end-scale", type=float, default=0.1,
+                    help="final LR as a fraction of the initial rate")
     args = ap.parse_args()
     run(scenarios=args.scenarios.split(","),
         methods=args.methods.split(","), episodes=args.episodes,
         eval_episodes=args.eval_episodes, num_envs=args.num_envs,
-        seed=args.seed, policy=args.policy)
+        seed=args.seed, policy=args.policy,
+        cfg_overrides=dict(eps_schedule=args.eps_schedule,
+                           lr_schedule=args.lr_schedule,
+                           lr_warmdown_episodes=args.lr_warmdown_episodes,
+                           lr_end_scale=args.lr_end_scale))
 
 
 if __name__ == "__main__":

@@ -16,6 +16,10 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: convergence,users,cache,runtime,"
                          "roofline,scenarios,fleet")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale smoke: runtime runs the shared-B8 "
+                         "throughput floor gate instead of the full "
+                         "sweep")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     episodes = 500 if args.full else 60
@@ -25,11 +29,16 @@ def main() -> None:
 
     t0 = time.time()
     if want("runtime"):
-        print("== Table 3: per-slot running time ==", flush=True)
         from . import bench_runtime
-        bench_runtime.run(users=(10, 12, 14, 16, 18))
-        print("\n== vector-env training throughput ==", flush=True)
-        bench_runtime.run_throughput((1, 8), episodes=4)
+        if args.smoke:
+            print("== runtime smoke: shared-B8 throughput floor ==",
+                  flush=True)
+            bench_runtime.run_smoke()
+        else:
+            print("== Table 3: per-slot running time ==", flush=True)
+            bench_runtime.run(users=(10, 12, 14, 16, 18))
+            print("\n== vector-env training throughput ==", flush=True)
+            bench_runtime.run_throughput((1, 8), episodes=4)
     if want("roofline"):
         print("\n== §Roofline: dry-run table ==", flush=True)
         from . import bench_roofline

@@ -1,0 +1,21 @@
+"""Agent protocol package (DESIGN.md §12).
+
+``Agent`` is the one learner API the two-timescale driver is written
+against; ``make_allocator`` / ``make_cacher`` dispatch a method name to its
+protocol bundle (the only places agent kinds are branched on);
+``vmap_agent`` is the single generic batching wrapper.
+
+Import discipline: this package's submodules import only ``repro.core``
+*submodules* (``d3pg``/``ddqn``/``baselines``/``env``), never the
+``repro.core`` package surface, and ``repro.core.t2drl`` imports only
+*submodules* of this package — so either package may be imported first
+without a cycle.
+"""
+from .base import (Agent, FrameObs, SlotObs, no_update,  # noqa: F401
+                   vmap_agent)
+from .allocators import (ALLOCATORS, d3pg_allocator, make_allocator,  # noqa: F401
+                         rcars_allocator, schrs_allocator)
+from .cachers import (CACHERS, ddqn_cacher, make_cacher,  # noqa: F401
+                      random_cacher, static_cacher)
+from .compat import (d3pg_init_batch, d3pg_update_batch,  # noqa: F401
+                     ddqn_init_batch, ddqn_update_batch)

@@ -1,0 +1,120 @@
+"""Short-timescale (per-slot) allocation agents behind the protocol.
+
+Factories return :class:`~repro.agents.base.Agent` bundles whose closures
+call the numeric cores in ``repro.core.d3pg`` / ``repro.core.baselines``
+verbatim — the protocol adds dispatch, not arithmetic.  Each agent's
+init/act/update is bit-identical to the legacy per-method functions on the
+same inputs (pinned by ``tests/test_agents.py``); driver-level semantics
+that changed alongside the refactor (per-frame replay write batching) are
+documented in DESIGN.md §12.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import GACfg, ga_allocate, rcars_allocate
+from repro.core.d3pg import (D3PGCfg, actor_act, amend_actions, d3pg_init,
+                             d3pg_update, make_actor_schedule)
+from repro.core.env import EnvCfg
+
+from .base import Agent, no_update
+
+_UPDATE_AUX = ("mask", "lr_actor", "lr_critic")
+
+
+def d3pg_allocator(d3: D3PGCfg, sched=None) -> Agent:
+    """The paper's D3PG allocator (``actor_kind="mlp"`` recovers DDPG).
+
+    ``act`` consumes a ``(2, 2)`` stacked key pair — ``keys[0]`` drives the
+    diffusion reverse chain, ``keys[1]`` the Gaussian exploration noise
+    (``step["sigma"]``) — exactly the two driver-split keys the legacy slot
+    step used, so the episode PRNG stream is unchanged.  ``act`` is
+    batch-transparent: one key pair serves a whole ``(B, S)`` lockstep
+    batch (``batch_act=None``).  ``sched`` overrides the actor's diffusion
+    schedule (default: derived from ``d3``)."""
+    sched = make_actor_schedule(d3) if sched is None else sched
+    U = d3.action_dim // 2
+
+    def act(state, obs, keys, step):
+        raw = actor_act(state["actor"], d3, sched, obs.s, keys[0])
+        raw = jnp.clip(
+            raw + step["sigma"] * jax.random.normal(keys[1], raw.shape),
+            0.0, 1.0)
+        return amend_actions(raw, obs.env.req, obs.env.rho, U, mask=obs.mask)
+
+    def update(state, batch, key):
+        data = {k: v for k, v in batch.items() if k not in _UPDATE_AUX}
+        return d3pg_update(state, d3, sched, data, key,
+                           mask=batch.get("mask"),
+                           lr_a=batch.get("lr_actor"),
+                           lr_c=batch.get("lr_critic"))
+
+    def greedy(policy, obs, key):
+        raw = actor_act(policy["actor"], d3, sched, obs.s, key)
+        return amend_actions(raw, obs.env.req, obs.env.rho, U, mask=obs.mask)
+
+    return Agent(name="d3pg" if d3.actor_kind == "diffusion" else "ddpg",
+                 learns=True,
+                 init=lambda key: d3pg_init(key, d3),
+                 act=act, update=update,
+                 export=lambda state: {"actor": state["actor"]},
+                 greedy=greedy)
+
+
+def schrs_allocator(env_cfg: EnvCfg, ga: GACfg) -> Agent:
+    """SCHRS per-slot genetic algorithm (no learned state).
+
+    The GA is inherently per-env (one population per cell), so the lockstep
+    ``batch_act`` splits the chain key per cell — the same
+    ``split(keys[0], B)`` the legacy shared-mode slot step used."""
+
+    def act(state, obs, keys, step):
+        return ga_allocate(keys[0], obs.env, env_cfg, obs.models, ga)
+
+    def batch_act(state, obs, keys, step):
+        B = obs.env.gamma_idx.shape[0]
+        return jax.vmap(
+            lambda k, e, m: ga_allocate(k, e, env_cfg, m, ga))(
+                jax.random.split(keys[0], B), obs.env, obs.models)
+
+    return Agent(name="schrs", learns=False,
+                 init=lambda key: {}, act=act, update=no_update,
+                 export=lambda state: {},
+                 greedy=lambda policy, obs, key: ga_allocate(
+                     key, obs.env, env_cfg, obs.models, ga),
+                 batch_act=batch_act)
+
+
+def rcars_allocator(env_cfg: EnvCfg) -> Agent:
+    """RCARS equal-split allocation (deterministic, keyless)."""
+
+    def act(state, obs, keys, step):
+        return rcars_allocate(obs.env, env_cfg)
+
+    def batch_act(state, obs, keys, step):
+        return jax.vmap(lambda e: rcars_allocate(e, env_cfg))(obs.env)
+
+    return Agent(name="rcars", learns=False,
+                 init=lambda key: {}, act=act, update=no_update,
+                 export=lambda state: {},
+                 greedy=lambda policy, obs, key: rcars_allocate(
+                     obs.env, env_cfg),
+                 batch_act=batch_act)
+
+
+ALLOCATORS = ("d3pg", "ddpg", "schrs", "rcars")
+
+
+def make_allocator(kind: str, env_cfg: EnvCfg, d3: D3PGCfg,
+                   ga: GACfg) -> Agent:
+    """Dispatch a short-timescale allocator name to its Agent bundle — the
+    only place allocator kinds are branched on (DESIGN.md §12)."""
+    if kind in ("d3pg", "ddpg"):
+        return d3pg_allocator(d3)
+    if kind == "schrs":
+        return schrs_allocator(env_cfg, ga)
+    if kind == "rcars":
+        return rcars_allocator(env_cfg)
+    raise ValueError(f"unknown allocator {kind!r}; expected one of "
+                     f"{ALLOCATORS}")

@@ -1,0 +1,125 @@
+"""The agent protocol (DESIGN.md §12): one learner API for every method.
+
+An :class:`Agent` is a NamedTuple of pure closures over a frozen config —
+``init(key) -> state``, ``act(state, obs, keys, step) -> action``,
+``update(state, batch, key) -> (state, metrics)`` — plus the inference-side
+closures the serving stack needs (``export``, ``greedy``).  The two-timescale
+driver in ``repro.core.t2drl`` is written against this protocol only; which
+paper method runs (D3PG/DDPG/SCHRS/RCARS allocators, DDQN/static/random
+cachers) is decided once, in the factory functions of
+``repro.agents.allocators`` / ``repro.agents.cachers``.
+
+Batching is obtained once, generically, via :func:`vmap_agent` (B independent
+learners as one stacked state pytree) instead of per-module ``*_batch``
+duplicates.  Lockstep vector-env rollouts additionally use ``batch_act``:
+``None`` declares ``act`` batch-transparent (one PRNG key drives the whole
+batch — e.g. a single actor network applied to ``(B, S)`` observations),
+while agents whose action sampler is inherently per-env (the SCHRS GA, the
+random cacher) supply an explicit lockstep ``batch_act`` that splits the key
+per cell.
+
+Conventions (DESIGN.md §12):
+
+- ``obs`` is a :class:`SlotObs` for allocators (per-slot agents) and a
+  :class:`FrameObs` for cachers (per-frame agents).
+- ``keys`` for ``act`` is whatever key material the driver hands the agent —
+  a ``(2, 2)`` stacked pair for slot allocators (actor chain + exploration
+  noise, preserving the episode PRNG stream exactly), a single key for
+  cachers.  Agents must not re-split driver keys.
+- ``step`` is a dict of per-step schedule scalars (``eps``, ``sigma``).
+- ``batch`` for ``update`` is the sampled replay minibatch; the reserved
+  keys ``mask`` / ``lr_actor`` / ``lr_critic`` carry per-call auxiliaries
+  (active-user masks, schedule-driven learning rates) and are stripped
+  before the minibatch reaches the numeric update.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+
+
+class SlotObs(NamedTuple):
+    """What a per-slot allocator may condition on.
+
+    ``s`` is the Eq. (21) observation vector (``(..., S)``); ``env`` the raw
+    :class:`~repro.core.env.EnvState` (the amenders need ``req``/``rho``,
+    the GA baseline scores candidate allocations against the full state);
+    ``models`` the cell's model zoo; ``mask`` an optional ``(..., U)``
+    active-user mask."""
+    s: Any
+    env: Any
+    models: Any
+    mask: Any = None
+
+
+class FrameObs(NamedTuple):
+    """What a per-frame cacher may condition on: the popularity state index
+    ``gamma_idx`` (the paper's DDQN state) and the model zoo (the amenders
+    need per-model storage sizes)."""
+    gamma_idx: Any
+    models: Any
+
+
+class Agent(NamedTuple):
+    """A learner as a bundle of pure closures (DESIGN.md §12).
+
+    Attributes
+    ----------
+    name : str
+        Method name (``"d3pg"``, ``"ddqn"``, ...), for error messages and
+        checkpoint metadata.
+    learns : bool
+        Whether the driver should store transitions and call ``update``.
+        Static — python-level branching on it specializes the compiled
+        episode program per method.
+    init : callable
+        ``init(key) -> state`` — fresh parameter/optimizer pytree.
+    act : callable
+        ``act(state, obs, keys, step) -> action``.  Slot allocators return
+        the amended ``(b, xi)``; frame cachers return ``(a_int, rho)``.
+    update : callable
+        ``update(state, batch, key) -> (state, metrics)``.  ``batch`` may
+        carry the reserved auxiliaries (see module docstring).
+    export : callable
+        ``export(state) -> dict`` — the inference-only parameter slice
+        (empty for non-learned agents), the unit ``repro.checkpoint`` saves
+        and the fleet twin restores.
+    greedy : callable
+        ``greedy(policy, obs, key) -> action`` — inference from an
+        ``export``-ed policy slice at zero exploration.
+    batch_act : callable, optional
+        Lockstep vector-env action sampler (``None`` = ``act`` is
+        batch-transparent; see module docstring).
+    """
+    name: str
+    learns: bool
+    init: Callable
+    act: Callable
+    update: Callable
+    export: Callable
+    greedy: Callable
+    batch_act: Optional[Callable] = None
+
+
+def no_update(state, batch, key):
+    """Shared ``update`` for non-learned agents: identity, no metrics."""
+    return state, {}
+
+
+def vmap_agent(agent: Agent) -> Agent:
+    """Lift an agent to B independent learners as one stacked pytree.
+
+    The returned agent's ``init`` takes ``(B, 2)`` stacked PRNG keys and
+    returns a state whose every leaf carries a leading ``(B,)`` axis;
+    ``act``/``update`` map per-cell states to per-cell observations /
+    minibatches with per-cell keys.  This is the single generic batching
+    wrapper that replaces the former ``d3pg_*_batch`` / ``ddqn_*_batch``
+    duplicates (DESIGN.md §12).
+    """
+    return agent._replace(
+        init=jax.vmap(agent.init),
+        act=jax.vmap(agent.act, in_axes=(0, 0, 0, None)),
+        update=jax.vmap(agent.update, in_axes=(0, 0, 0)),
+        batch_act=None,
+    )

@@ -1,0 +1,110 @@
+"""Long-timescale (per-frame) caching agents behind the protocol.
+
+Cacher ``act`` returns ``(a_int, rho)`` — the raw integer action (what the
+DDQN frame transition stores) and the amended caching vector.  As with the
+allocators, closures call the numeric cores (``repro.core.ddqn`` /
+``repro.core.baselines``) verbatim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import random_cache, static_popular_cache
+from repro.core.ddqn import DDQNCfg, amend_caching, ddqn_act, ddqn_init, \
+    ddqn_update
+from repro.core.env import EnvCfg
+
+from .base import Agent, no_update
+
+
+def ddqn_cacher(dq: DDQNCfg, env_cfg: EnvCfg) -> Agent:
+    """The paper's DDQN cacher over the 2^M caching actions.
+
+    ``act`` is batch-transparent in the epsilon-greedy draw (one key drives
+    a ``(B,)`` batch of popularity states, as the legacy lockstep frame
+    step did); the amender is vmapped only when the model zoo carries a
+    cell axis."""
+
+    def act(state, obs, key, step):
+        a_int = ddqn_act(state, dq, obs.gamma_idx, key, step["eps"])
+        rho = amend_caching(a_int, dq, obs.models.c, env_cfg.C)
+        return a_int, rho
+
+    def batch_act(state, obs, key, step):
+        a_int = ddqn_act(state, dq, obs.gamma_idx, key, step["eps"])
+        rho = jax.vmap(lambda a, c: amend_caching(a, dq, c, env_cfg.C))(
+            a_int, obs.models.c)
+        return a_int, rho
+
+    def update(state, batch, key):
+        data = {k: v for k, v in batch.items() if k != "lr"}
+        new, loss = ddqn_update(state, dq, data, lr=batch.get("lr"))
+        return new, {"loss": loss}
+
+    def greedy(policy, obs, key):
+        a_int = ddqn_act(policy["ddqn"], dq, obs.gamma_idx, key, 0.0)
+        return amend_caching(a_int, dq, obs.models.c, env_cfg.C)
+
+    return Agent(name="ddqn", learns=True,
+                 init=lambda key: ddqn_init(key, dq),
+                 act=act, update=update,
+                 export=lambda state: {"ddqn": {"q": state["q"]}},
+                 greedy=greedy, batch_act=batch_act)
+
+
+def static_cacher(env_cfg: EnvCfg) -> Agent:
+    """SCHRS static caching: most-popular models greedily to capacity."""
+
+    def act(state, obs, key, step):
+        a_int = jnp.int32(0)
+        return a_int, static_popular_cache(obs.models, env_cfg)
+
+    def batch_act(state, obs, key, step):
+        B = obs.gamma_idx.shape[0]
+        rho = jax.vmap(lambda m: static_popular_cache(m, env_cfg))(obs.models)
+        return jnp.zeros((B,), jnp.int32), rho
+
+    return Agent(name="static", learns=False,
+                 init=lambda key: {}, act=act, update=no_update,
+                 export=lambda state: {},
+                 greedy=lambda policy, obs, key: static_popular_cache(
+                     obs.models, env_cfg),
+                 batch_act=batch_act)
+
+
+def random_cacher(env_cfg: EnvCfg) -> Agent:
+    """RCARS random caching: random-order greedy fill, one key per cell in
+    lockstep mode (the legacy ``random_cache_batch`` key derivation)."""
+
+    def act(state, obs, key, step):
+        a_int = jnp.int32(0)
+        return a_int, random_cache(key, obs.models, env_cfg)
+
+    def batch_act(state, obs, key, step):
+        B = obs.gamma_idx.shape[0]
+        rho = jax.vmap(lambda k, m: random_cache(k, m, env_cfg))(
+            jax.random.split(key, B), obs.models)
+        return jnp.zeros((B,), jnp.int32), rho
+
+    return Agent(name="random", learns=False,
+                 init=lambda key: {}, act=act, update=no_update,
+                 export=lambda state: {},
+                 greedy=lambda policy, obs, key: random_cache(
+                     key, obs.models, env_cfg),
+                 batch_act=batch_act)
+
+
+CACHERS = ("ddqn", "static", "random")
+
+
+def make_cacher(kind: str, dq: DDQNCfg, env_cfg: EnvCfg) -> Agent:
+    """Dispatch a long-timescale cacher name to its Agent bundle — the
+    only place cacher kinds are branched on (DESIGN.md §12)."""
+    if kind == "ddqn":
+        return ddqn_cacher(dq, env_cfg)
+    if kind == "static":
+        return static_cacher(env_cfg)
+    if kind == "random":
+        return random_cacher(env_cfg)
+    raise ValueError(f"unknown cacher {kind!r}; expected one of {CACHERS}")

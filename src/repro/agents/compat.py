@@ -1,0 +1,61 @@
+"""Legacy ``*_batch`` helpers as thin shims over :func:`vmap_agent`.
+
+These names predate the agent protocol (they were bespoke duplicates in
+``core/d3pg.py`` / ``core/ddqn.py``); they are re-exported unchanged
+through ``repro.core`` for API stability but now all route through the one
+generic batching wrapper (DESIGN.md §12).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.d3pg import D3PGCfg
+from repro.core.ddqn import DDQNCfg
+from repro.core.env import EnvCfg
+
+from .allocators import d3pg_allocator
+from .base import vmap_agent
+from .cachers import ddqn_cacher
+
+
+def _broadcast_aux(aux, B):
+    """Broadcast shared per-call auxiliaries (masks, lr scalars) to a
+    leading (B,) cell axis for the vmapped protocol update."""
+    return {k: jnp.broadcast_to(jnp.asarray(v), (B,) + jnp.shape(v))
+            for k, v in aux.items() if v is not None}
+
+
+def d3pg_init_batch(keys, cfg: D3PGCfg):
+    """B independent actor/critic/optimizer stacks; keys: (B, 2)."""
+    return vmap_agent(d3pg_allocator(cfg)).init(keys)
+
+
+def d3pg_update_batch(params, cfg: D3PGCfg, sched, batch, keys, *,
+                      lr_a=None, lr_c=None, mask=None):
+    """One minibatch step per env in a single compiled call.  ``params`` and
+    ``batch`` carry a leading (B,) axis; keys: (B, 2).  ``sched`` is the
+    actor's diffusion schedule, honored as given (as in the legacy
+    implementation).  Returns (params, losses) with per-env losses of
+    shape (B,)."""
+    B = keys.shape[0]
+    aux = _broadcast_aux({"lr_actor": lr_a, "lr_critic": lr_c, "mask": mask},
+                         B)
+    return vmap_agent(d3pg_allocator(cfg, sched)).update(
+        params, {**batch, **aux}, keys)
+
+
+def ddqn_init_batch(keys, cfg: DDQNCfg):
+    """B independent Q/target/optimizer stacks; keys: (B, 2)."""
+    return vmap_agent(ddqn_cacher(cfg, EnvCfg(M=cfg.M))).init(keys)
+
+
+def ddqn_update_batch(params, cfg: DDQNCfg, batch, *, lr=None):
+    """One minibatch step per env; ``params``/``batch`` carry a leading
+    (B,) axis.  Returns (params, per-env losses of shape (B,))."""
+    B = jax.tree.leaves(batch)[0].shape[0]
+    aux = _broadcast_aux({"lr": lr}, B)
+    keys = jnp.zeros((B, 2), jnp.uint32)   # ddqn_update is keyless
+    new, metrics = vmap_agent(ddqn_cacher(cfg, EnvCfg(M=cfg.M))).update(
+        params, {**batch, **aux}, keys)
+    return new, metrics["loss"]

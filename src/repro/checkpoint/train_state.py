@@ -11,6 +11,14 @@ slices from ``export_policy``).  Two things the raw codec cannot do alone:
 - A checkpoint carries a small JSON-safe ``meta`` map (format version plus
   caller-supplied fields such as allocator/cacher/seed) so a serving
   process can sanity-check what it restored before deploying it.
+
+The unified TrainState layout (DESIGN.md §12) keeps this codec agent-kind
+agnostic: ``repro.core.t2drl_init`` always produces ``{"models", "d3pg",
+"ddqn", "ebuf", "fbuf"}`` regardless of method, and ``export_policy``
+delegates to ``Agent.export`` for the inference slice — so the same
+save/restore path covers every allocator/cacher combination and both
+vector-env modes without special cases (batched round-trip pinned in
+``tests/test_fleet.py``).
 """
 from __future__ import annotations
 

@@ -9,16 +9,29 @@ from .env import (EnvCfg, EnvState, ModelParams, ScenarioSchedule,  # noqa: F401
                   schedule_slot_mod, slot_metrics, slot_reward)
 from .quality import tv_quality, gen_delay  # noqa: F401
 from .ddqn import (DDQNCfg, amend_caching, ddqn_act, ddqn_init,  # noqa: F401
-                   ddqn_init_batch, ddqn_update, ddqn_update_batch)
+                   ddqn_update)
 from .d3pg import (D3PGCfg, actor_act, amend_actions, critic_q, d3pg_init,  # noqa: F401
-                   d3pg_init_batch, d3pg_update, d3pg_update_batch,
-                   make_actor_schedule)
-from .buffers import (buffer_add, buffer_add_batch, buffer_init,  # noqa: F401
-                      buffer_init_batch, buffer_sample, buffer_sample_batch)
+                   d3pg_update, make_actor_schedule)
+from .buffers import (buffer_add, buffer_add_batch, buffer_add_many,  # noqa: F401
+                      buffer_add_many_batch, buffer_init, buffer_init_batch,
+                      buffer_sample, buffer_sample_batch)
 from .baselines import (GACfg, ga_allocate, random_cache,  # noqa: F401
                         random_cache_batch, rcars_allocate,
                         static_popular_cache, static_popular_cache_batch)
-from .t2drl import (T2DRLCfg, episode_epsilon, episode_sigma,  # noqa: F401
-                    eval_t2drl, export_policy, greedy_frame_cache,
-                    greedy_slot_action, run_episode, run_eval, run_training,
-                    t2drl_init, t2drl_init_batch, train_t2drl)
+from .t2drl import (T2DRLCfg, episode_epsilon, episode_lr_scale,  # noqa: F401
+                    episode_sigma, eval_t2drl, export_policy,
+                    greedy_frame_cache, greedy_slot_action, run_episode,
+                    run_eval, run_training, t2drl_init, t2drl_init_batch,
+                    train_t2drl)
+# Legacy per-method batch helpers now live behind the agent protocol as thin
+# shims over repro.agents.vmap_agent.  Re-exported lazily (PEP 562): a module
+# -level import would cycle when repro.agents is imported before repro.core.
+_AGENT_COMPAT = ("d3pg_init_batch", "d3pg_update_batch",
+                 "ddqn_init_batch", "ddqn_update_batch")
+
+
+def __getattr__(name):
+    if name in _AGENT_COMPAT:
+        from repro.agents import compat
+        return getattr(compat, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -26,8 +26,40 @@ def buffer_add(buf, item):
 
 
 def buffer_sample(buf, key, batch: int):
+    """Uniform minibatch draw **with replacement** (DESIGN.md §12).
+
+    With-replacement is intentional: an exact without-replacement draw under
+    jit needs a masked top-k over the full capacity (~2x the key-derived
+    randint cost per update, measured on the 2-core CI box), while for the
+    steady-state regime (size >> batch, e.g. 10000 vs 64) the collision
+    probability per draw is < batch/size ≈ 0.6% — the occasional duplicate
+    row only reweights a gradient contribution.  ``tests/test_agents.py``
+    pins the sampling contract (in-range indices, stored items only,
+    deterministic given the key)."""
     idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf["size"], 1))
     return jax.tree.map(lambda d: d[idx], buf["data"])
+
+
+def buffer_add_many(buf, items):
+    """Append ``n`` items in one batched write; items' leaves carry a
+    leading ``(n,)`` axis (oldest first).  Equivalent to ``n`` successive
+    ``buffer_add`` calls — same final data/ptr/size, including cyclic
+    wraparound (``n`` may exceed the remaining headroom but not the
+    capacity) — at the cost of ONE scatter per leaf instead of ``n``.
+    The episode driver uses this to batch replay writes once per frame
+    (DESIGN.md §12)."""
+    n = jax.tree.leaves(items)[0].shape[0]
+    cap = _capacity(buf)
+    if n > cap:
+        # duplicate scatter indices would make the surviving rows depend on
+        # XLA's scatter order — refuse instead of silently losing determinism
+        raise ValueError(f"buffer_add_many: cannot write {n} items into a "
+                         f"buffer of capacity {cap}; writes batched per "
+                         f"frame require capacity >= K")
+    idx = (buf["ptr"] + jnp.arange(n)) % cap
+    data = jax.tree.map(lambda d, x: d.at[idx].set(x), buf["data"], items)
+    return {"data": data, "ptr": (buf["ptr"] + n) % cap,
+            "size": jnp.minimum(buf["size"] + n, cap)}
 
 
 # -- batched (per-env leading axis) -------------------------------------------
@@ -48,6 +80,12 @@ def buffer_init_batch(num_envs: int, capacity: int, item_example):
 def buffer_add_batch(buf, items):
     """Add one item per env; items' leaves carry a leading (B,) axis."""
     return jax.vmap(buffer_add)(buf, items)
+
+
+def buffer_add_many_batch(buf, items):
+    """Per-env batched append: items' leaves are (B, n, ...) — ``n`` items
+    for each of the B independent buffers, one scatter per env per leaf."""
+    return jax.vmap(buffer_add_many)(buf, items)
 
 
 def buffer_sample_batch(buf, keys, batch: int):

@@ -163,18 +163,6 @@ def d3pg_update(params, cfg: D3PGCfg, sched, batch, key, *,
            "opt_a": opt_a_new, "opt_c": opt_c_new}
     return new, {"critic_loss": c_loss, "actor_loss": a_loss}
 
-
-# -- batched (per-env leading axis) -------------------------------------------
-
-def d3pg_init_batch(keys, cfg: D3PGCfg):
-    """B independent actor/critic/optimizer stacks; keys: (B, 2)."""
-    return jax.vmap(lambda k: d3pg_init(k, cfg))(keys)
-
-
-def d3pg_update_batch(params, cfg: D3PGCfg, sched, batch, keys, **kw):
-    """One minibatch step per env in a single compiled call.  ``params`` and
-    ``batch`` carry a leading (B,) axis; keys: (B, 2).  Returns
-    (params, losses) with per-env losses of shape (B,)."""
-    return jax.vmap(
-        lambda p, b, k: d3pg_update(p, cfg, sched, b, k, **kw))(
-            params, batch, keys)
+# Batched (per-env leading axis) init/update live behind the agent protocol:
+# repro.agents.vmap_agent generically lifts any Agent to B stacked learners
+# (d3pg_init_batch / d3pg_update_batch remain as shims in repro.agents).

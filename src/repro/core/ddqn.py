@@ -97,15 +97,6 @@ def ddqn_update(params, cfg: DDQNCfg, batch, *, lr=None):
             "q_target": soft_update(params["q_target"], q_new, cfg.kappa),
             "opt": opt_new}, loss
 
-
-# -- batched (per-env leading axis) -------------------------------------------
-
-def ddqn_init_batch(keys, cfg: DDQNCfg):
-    """B independent Q/target/optimizer stacks; keys: (B, 2)."""
-    return jax.vmap(lambda k: ddqn_init(k, cfg))(keys)
-
-
-def ddqn_update_batch(params, cfg: DDQNCfg, batch, **kw):
-    """One minibatch step per env; ``params``/``batch`` carry a leading
-    (B,) axis.  Returns (params, per-env losses of shape (B,))."""
-    return jax.vmap(lambda p, b: ddqn_update(p, cfg, b, **kw))(params, batch)
+# Batched (per-env leading axis) init/update live behind the agent protocol:
+# repro.agents.vmap_agent generically lifts any Agent to B stacked learners
+# (ddqn_init_batch / ddqn_update_batch remain as shims in repro.agents).

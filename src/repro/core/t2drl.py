@@ -1,8 +1,9 @@
-"""T2DRL — the paper's Algorithm 1: outer long-timescale DDQN (caching) +
-inner short-timescale D3PG (resource allocation), fully jitted per episode.
+"""T2DRL — the paper's Algorithm 1: outer long-timescale caching (frames) +
+inner short-timescale allocation (slots), fully jitted per episode.
 
-``allocator``/``cacher`` select the agent combination, covering the paper's
-benchmarks:
+The driver is written against the agent protocol (``repro.agents``,
+DESIGN.md §12): a per-slot allocator Agent and a per-frame cacher Agent,
+selected once by ``allocator``/``cacher``, covering the paper's benchmarks:
 
   T2DRL             allocator="d3pg",  cacher="ddqn"
   DDPG-based T2DRL  allocator="ddpg",  cacher="ddqn"
@@ -18,6 +19,14 @@ multi-episode run is ONE compiled call.  ``run_episode`` remains the public
 single-env entry point, and B=1 bypasses vmap entirely, so the legacy path
 is reproduced exactly (cell 0 of any batch uses the same keys as a legacy
 single-env run with the same seed).
+
+Compiled-path engineering (DESIGN.md §12): scan carries hold only what a
+timescale mutates (agent state, env, carried observation — replay buffers
+are scan constants within a frame), replay writes are batched once per
+frame, epsilon/sigma/LR schedules are precomputed scan inputs, the train
+state is donated through ``run_training``, and on CPU the episode programs
+are compiled with the sequential (non-thunk) XLA runtime, which executes
+these long two-level scans measurably faster.
 """
 from __future__ import annotations
 
@@ -28,14 +37,16 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .baselines import (GACfg, ga_allocate, random_cache, random_cache_batch,
-                        rcars_allocate, static_popular_cache,
-                        static_popular_cache_batch)
-from .buffers import (buffer_add, buffer_add_batch, buffer_init,
-                      buffer_sample, buffer_sample_batch)
-from .d3pg import (D3PGCfg, actor_act, amend_actions, d3pg_init, d3pg_update,
-                   make_actor_schedule)
-from .ddqn import DDQNCfg, amend_caching, ddqn_act, ddqn_init, ddqn_update
+# only repro.agents.base (which has no repro.core dependency) is safe to
+# import at module level; the factory dispatch is imported lazily inside
+# _agents so either package may be imported first without a cycle
+from repro.agents.base import FrameObs, SlotObs
+from .baselines import GACfg
+from .buffers import (buffer_add, buffer_add_batch, buffer_add_many,
+                      buffer_add_many_batch, buffer_init, buffer_sample,
+                      buffer_sample_batch)
+from .d3pg import D3PGCfg, d3pg_init
+from .ddqn import DDQNCfg, ddqn_init
 from .env import (EnvCfg, EnvState, ModelParams, ScenarioSchedule,
                   env_advance_frame, env_reset, env_reset_batch,
                   env_set_cache, env_step_slot, make_models, make_user_masks,
@@ -63,9 +74,29 @@ class T2DRLCfg:
         Stored slot transitions before D3PG minibatch updates begin.
     eps_start, eps_end, eps_decay_episodes : float, float, int
         DDQN epsilon-greedy schedule over episodes.
+    eps_schedule : {"linear", "cosine"}
+        Epsilon (and exploration-sigma) decay shape over
+        ``eps_decay_episodes`` — "linear" is the paper's schedule;
+        "cosine" holds exploration longer before annealing (DESIGN.md §12).
     lr_actor, lr_critic, lr_ddqn : float
         Adam learning rates (paper default 1e-6; see DESIGN.md §8 for the
         tuned CI-scale values).
+    lr_schedule : {"const", "linear", "cosine"}
+        Actor/critic learning-rate warmdown over ``lr_warmdown_episodes``
+        episodes, from the configured rate down to ``lr_end_scale`` times
+        it.  "const" (default) reproduces the fixed-rate paper setup
+        exactly; schedules are materialized as precomputed per-episode
+        scan inputs (no python re-entry).
+    lr_warmdown_episodes : int
+        Horizon of the LR warmdown (ignored for ``lr_schedule="const"``).
+    lr_end_scale : float
+        Final LR as a fraction of the initial rate.
+    updates_per_slot : int
+        Gradient steps per rollout slot once past warmup (default 1 — the
+        paper's 1:1 update:data ratio, using the exact legacy per-slot
+        key stream).  Values > 1 run an inner ``lax.scan`` of minibatch
+        updates per slot, letting long-horizon runs trade rollout steps
+        for gradient steps without re-entering Python (DESIGN.md §12).
     L : int
         Diffusion-actor denoising steps (paper Fig. 6a).
     seed : int
@@ -82,9 +113,14 @@ class T2DRLCfg:
     eps_start: float = 1.0      # DDQN epsilon-greedy schedule (per episode)
     eps_end: float = 0.05
     eps_decay_episodes: int = 300
+    eps_schedule: str = "linear"    # linear | cosine
     lr_actor: float = 1e-6      # paper default; benchmarks also run tuned lr
     lr_critic: float = 1e-6
     lr_ddqn: float = 1e-6
+    lr_schedule: str = "const"      # const | linear | cosine
+    lr_warmdown_episodes: int = 0
+    lr_end_scale: float = 0.1
+    updates_per_slot: int = 1
     L: int = 5                  # D3PG denoising steps
     seed: int = 0
     ga: GACfg = GACfg()
@@ -101,7 +137,27 @@ class T2DRLCfg:
                        lr=self.lr_ddqn)
 
 
+def _agents(cfg: T2DRLCfg):
+    """The (allocator, cacher) Agent pair for ``cfg`` — the single place
+    method names are dispatched (DESIGN.md §12)."""
+    # lazy: repro.agents.{allocators,cachers} import repro.core submodules,
+    # so a module-level import here would cycle when repro.agents loads first
+    from repro.agents.allocators import make_allocator
+    from repro.agents.cachers import make_cacher
+    if cfg.updates_per_slot < 1:
+        raise ValueError("updates_per_slot must be >= 1")
+    return (make_allocator(cfg.allocator, cfg.env, cfg.d3pg_cfg(), cfg.ga),
+            make_cacher(cfg.cacher, cfg.ddqn_cfg(), cfg.env))
+
+
 def t2drl_init(key, cfg: T2DRLCfg):
+    """Fresh unified train-state pytree (DESIGN.md §12).
+
+    The layout is FIXED regardless of method — ``{"models", "d3pg",
+    "ddqn", "ebuf", "fbuf"}`` — so vector-env squeeze/expand, checkpoints
+    (``repro.checkpoint.save_train_state``), and fleet policy export never
+    branch on agent kinds; non-learned methods simply never read their
+    (still initialized) learner slots."""
     km, kq, kd = jax.random.split(key, 3)
     env = cfg.env
     models = make_models(km, env)
@@ -160,127 +216,215 @@ def t2drl_init_batch(key, cfg: T2DRLCfg, num_envs: int, *,
     return ts
 
 
-def episode_epsilon(cfg: T2DRLCfg, episode):
+# -- exploration / learning-rate schedules (precomputed scan inputs) ----------
+
+def _eps_frac(cfg: T2DRLCfg, episode):
+    """Annealing fraction in [0, 1] under ``cfg.eps_schedule`` (validated —
+    an unknown name must raise, not silently fall back to linear)."""
     frac = jnp.clip(episode / max(cfg.eps_decay_episodes, 1), 0.0, 1.0)
+    if cfg.eps_schedule == "cosine":
+        return 0.5 * (1.0 - jnp.cos(jnp.pi * frac))
+    if cfg.eps_schedule != "linear":
+        raise ValueError(f"unknown eps_schedule {cfg.eps_schedule!r}; "
+                         "expected 'linear' or 'cosine'")
+    return frac
+
+
+def episode_epsilon(cfg: T2DRLCfg, episode):
+    """DDQN epsilon at ``episode`` (scalar or array of episode indices)."""
+    frac = _eps_frac(cfg, episode)
     return cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
 
 
 def episode_sigma(cfg: T2DRLCfg, episode):
     """Exploration-noise schedule: decays from explore_sigma to 0.02 on the
     same schedule as epsilon; zero for the non-learned allocators."""
+    episode = jnp.asarray(episode, jnp.float32)
     if cfg.allocator not in ("d3pg", "ddpg"):
-        return jnp.float32(0.0)
+        return jnp.zeros_like(episode)
     d3 = cfg.d3pg_cfg()
-    frac = jnp.clip(episode / max(cfg.eps_decay_episodes, 1), 0.0, 1.0)
+    frac = _eps_frac(cfg, episode)
     return (d3.explore_sigma * (1.0 - frac) + 0.02 * frac).astype(jnp.float32)
 
 
-def _episode_core(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
+def episode_lr_scale(cfg: T2DRLCfg, episode):
+    """Actor/critic LR warmdown factor at ``episode``: 1 -> lr_end_scale
+    over ``lr_warmdown_episodes`` (identically 1 for "const")."""
+    episode = jnp.asarray(episode, jnp.float32)
+    if cfg.lr_schedule == "const":
+        return jnp.ones_like(episode)
+    if cfg.lr_schedule not in ("linear", "cosine"):
+        raise ValueError(f"unknown lr_schedule {cfg.lr_schedule!r}; "
+                         "expected 'const', 'linear' or 'cosine'")
+    if cfg.lr_warmdown_episodes < 1:
+        # silently clamping would collapse the LR to lr_end_scale right
+        # after episode 0 — an instant cliff, not a warmdown
+        raise ValueError(f"lr_schedule={cfg.lr_schedule!r} requires "
+                         "lr_warmdown_episodes >= 1")
+    frac = jnp.clip(episode / cfg.lr_warmdown_episodes, 0.0, 1.0)
+    if cfg.lr_schedule == "cosine":
+        frac = 0.5 * (1.0 - jnp.cos(jnp.pi * frac))
+    return 1.0 + (cfg.lr_end_scale - 1.0) * frac
+
+
+def _update_aux(step, mask):
+    """Reserved minibatch auxiliaries for Agent.update (DESIGN.md §12):
+    the active-user mask and any schedule-driven learning rates."""
+    aux = {}
+    if mask is not None:
+        aux["mask"] = mask
+    if "lr_actor" in step:
+        aux["lr_actor"] = step["lr_actor"]
+        aux["lr_critic"] = step["lr_critic"]
+    return aux
+
+
+def _slot_updates(alloc, cfg: T2DRLCfg, state, ks, step, aux_mask, sample):
+    """``updates_per_slot`` sample+update steps of the allocator, shared by
+    both episode cores (``sample(key) -> minibatch`` is the only part that
+    differs).  N == 1 consumes ``ks[2]``/``ks[3]`` directly — the exact
+    legacy per-slot key stream; N > 1 runs an inner ``lax.scan`` over
+    ``split(ks[2], N)`` / ``split(ks[3], N)`` (DESIGN.md §12)."""
+    def one(state, kk):
+        k_samp, k_upd = kk
+        batch = sample(k_samp)
+        state, _ = alloc.update(state,
+                                {**batch, **_update_aux(step, aux_mask)},
+                                k_upd)
+        return state, None
+    if cfg.updates_per_slot == 1:
+        state, _ = one(state, (ks[2], ks[3]))
+        return state
+    state, _ = jax.lax.scan(
+        one, state, (jax.random.split(ks[2], cfg.updates_per_slot),
+                     jax.random.split(ks[3], cfg.updates_per_slot)))
+    return state
+
+
+# -- episode cores ------------------------------------------------------------
+
+def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
                   mask=None, mods: Optional[ScenarioSchedule] = None):
-    """One episode of Algorithm 1 for a single env.  ``mask`` is an optional
-    (U,) 0/1 vector of active users (heterogeneous-population cells);
-    ``mods`` an optional per-episode ScenarioSchedule (unbatched leaves)
-    whose slices are fed to the env at every draw (DESIGN.md §9).  With
-    ``mask=None, mods=None`` the computation is identical to the
-    pre-vectorization ``run_episode``.  Returns (ts, stats)."""
+    """One episode of Algorithm 1 for a single env.
+
+    ``step`` is the per-episode schedule dict (``eps``, ``sigma``, optional
+    ``lr_*``); ``mask`` an optional (U,) 0/1 vector of active users
+    (heterogeneous-population cells); ``mods`` an optional per-episode
+    ScenarioSchedule (unbatched leaves) whose slices are fed to the env at
+    every draw (DESIGN.md §9).  The PRNG stream is identical to the
+    pre-protocol driver; replay writes are batched once per frame, so a
+    slot's minibatch samples from the buffer as of the frame start
+    (DESIGN.md §12).  Returns (ts, stats)."""
     env_cfg = cfg.env
     d3 = cfg.d3pg_cfg()
     dq = cfg.ddqn_cfg()
-    sched = make_actor_schedule(d3)
+    alloc, cacher = _agents(cfg)
     models: ModelParams = ts["models"]
+    cap_e = d3.buffer
     k_env, key = jax.random.split(key)
     env = env_reset(k_env, env_cfg, schedule_slot_mod(mods, 0))
 
-    def slot_step(carry, xs):
-        k_slot, g = xs                 # g: global slot index t*K + k
-        ts, env = carry
-        ks = jax.random.split(k_slot, 4)
-        s = observe(env, env_cfg, models, mask)
-        if cfg.allocator in ("d3pg", "ddpg"):
-            raw = actor_act(ts["d3pg"]["actor"], d3, sched, s, ks[0])
-            raw = jnp.clip(raw + sigma * jax.random.normal(ks[1], raw.shape),
-                           0.0, 1.0)
-            b, xi = amend_actions(raw, env.req, env.rho, env_cfg.U, mask=mask)
-        elif cfg.allocator == "schrs":
-            b, xi = ga_allocate(ks[0], env, env_cfg, models, cfg.ga)
-        else:  # rcars
-            b, xi = rcars_allocate(env, env_cfg)
-        env1, r, m = env_step_slot(env, env_cfg, models, b, xi, mask,
-                                   schedule_slot_mod(mods, g + 1))
-        new_ts = ts
-        if cfg.allocator in ("d3pg", "ddpg"):
-            s1 = observe(env1, env_cfg, models, mask)
-            item = {"s": s, "a": jnp.concatenate([b, xi]), "r": r, "s1": s1,
-                    "req": env.req, "rho": env.rho, "req1": env1.req,
-                    "rho1": env1.rho}
-            ebuf = buffer_add(ts["ebuf"], item)
-            new_ts = {**ts, "ebuf": ebuf}
-            if train:
-                def do_update(ts_in):
-                    batch = buffer_sample(ts_in["ebuf"], ks[2], d3.batch)
-                    d3pg_new, _ = d3pg_update(ts_in["d3pg"], d3, sched,
-                                              batch, ks[3], mask=mask)
-                    return {**ts_in, "d3pg": d3pg_new}
-                new_ts = jax.lax.cond(ebuf["size"] > cfg.warmup, do_update,
-                                      lambda t: t, new_ts)
-        stats = {"r": r, "hit": masked_mean(m["cached"], mask),
-                 "G": masked_mean(m["G"], mask),
-                 "delay": masked_mean(m["d_tl"], mask),
-                 "quality": masked_mean(m["quality"], mask),
-                 "viol": masked_mean(
-                     (m["d_tl"] > env_cfg.tau).astype(jnp.float32), mask)}
-        return (new_ts, env1), stats
+    def slot_stats(r, m):
+        return {"r": r, "hit": masked_mean(m["cached"], mask),
+                "G": masked_mean(m["G"], mask),
+                "delay": masked_mean(m["d_tl"], mask),
+                "quality": masked_mean(m["quality"], mask),
+                "viol": masked_mean(
+                    (m["d_tl"] > env_cfg.tau).astype(jnp.float32), mask)}
 
     def frame_step(carry, xs):
         k_frame, t = xs                # t: frame index into the schedule
-        ts, env = carry
+        if alloc.learns:
+            alloc_state, ebuf, env = carry
+        else:
+            alloc_state, (env,) = ts["d3pg"], carry
         kf = jax.random.split(k_frame, 3)
         env = env_advance_frame(env, env_cfg, schedule_frame_P(mods, t),
                                 schedule_slot_mod(mods, t * env_cfg.K))
         gamma_t = env.gamma_idx
-        if cfg.cacher == "ddqn":
-            a_int = ddqn_act(ts["ddqn"], dq, gamma_t, kf[0], eps)
-            rho = amend_caching(a_int, dq, models.c, env_cfg.C)
-        elif cfg.cacher == "static":
-            a_int = jnp.int32(0)
-            rho = static_popular_cache(models, env_cfg)
-        else:  # random
-            a_int = jnp.int32(0)
-            rho = random_cache(kf[0], models, env_cfg)
+        a_int, rho = cacher.act(ts["ddqn"], FrameObs(gamma_t, models),
+                                kf[0], step)
         env = env_set_cache(env, rho)
-        (ts, env), slot_stats = jax.lax.scan(
-            slot_step, (ts, env),
-            (jax.random.split(kf[1], env_cfg.K),
-             t * env_cfg.K + jnp.arange(env_cfg.K)))
+        size0 = ebuf["size"] if alloc.learns else None
+
+        def slot_step(carry, xs):
+            k_slot, g = xs             # g: global slot index t*K + k
+            if alloc.learns:
+                alloc_state, env, s = carry
+            else:
+                alloc_state, (env,), s = ts["d3pg"], carry, None
+            ks = jax.random.split(k_slot, 4)
+            b, xi = alloc.act(alloc_state, SlotObs(s, env, models, mask),
+                              ks[:2], step)
+            env1, r, m = env_step_slot(env, env_cfg, models, b, xi, mask,
+                                       schedule_slot_mod(mods, g + 1))
+            if not alloc.learns:
+                return (env1,), slot_stats(r, m)
+            s1 = observe(env1, env_cfg, models, mask)
+            item = {"s": s, "a": jnp.concatenate([b, xi]), "r": r, "s1": s1,
+                    "req": env.req, "rho": env.rho, "req1": env1.req,
+                    "rho1": env1.rho}
+            if train:
+                # transitions stored so far = frame-start size + slot count
+                # (the write itself is batched at frame end); sampling past
+                # warmup therefore sees the buffer as of the frame start
+                k_in = g - t * env_cfg.K
+                stored = jnp.minimum(size0 + k_in + 1, cap_e)
+                alloc_state = jax.lax.cond(
+                    (stored > cfg.warmup) & (size0 > 0),
+                    lambda st: _slot_updates(
+                        alloc, cfg, st, ks, step, mask,
+                        lambda k: buffer_sample(ebuf, k, d3.batch)),
+                    lambda st: st, alloc_state)
+            return (alloc_state, env1, s1), (slot_stats(r, m), item)
+
+        g_idx = t * env_cfg.K + jnp.arange(env_cfg.K)
+        slot_keys = jax.random.split(kf[1], env_cfg.K)
+        if alloc.learns:
+            s = observe(env, env_cfg, models, mask)
+            (alloc_state, env, _), (stats, items) = jax.lax.scan(
+                slot_step, (alloc_state, env, s), (slot_keys, g_idx))
+            ebuf = buffer_add_many(ebuf, items)
+        else:
+            (env,), stats = jax.lax.scan(slot_step, (env,),
+                                         (slot_keys, g_idx))
         # frame reward (32): average slot reward minus storage penalty
         # (erratum-corrected sign — see DESIGN.md §8)
         storage_viol = (jnp.sum(rho * models.c) > env_cfg.C).astype(jnp.float32)
-        r_frame = jnp.mean(slot_stats["r"]) - storage_viol * env_cfg.Xi
+        r_frame = jnp.mean(stats["r"]) - storage_viol * env_cfg.Xi
         out = {"gamma": gamma_t, "a_int": a_int, "r_frame": r_frame,
-               "slot": slot_stats, "storage_viol": storage_viol}
-        return (ts, env), out
+               "slot": stats, "storage_viol": storage_viol}
+        carry = ((alloc_state, ebuf, env) if alloc.learns else (env,))
+        return carry, out
 
-    (ts, env), frames = jax.lax.scan(
-        frame_step, (ts, env),
-        (jax.random.split(key, env_cfg.T), jnp.arange(env_cfg.T)))
+    frame_xs = (jax.random.split(key, env_cfg.T), jnp.arange(env_cfg.T))
+    if alloc.learns:
+        (alloc_state, ebuf, env), frames = jax.lax.scan(
+            frame_step, (ts["d3pg"], ts["ebuf"], env), frame_xs)
+    else:
+        (env,), frames = jax.lax.scan(frame_step, (env,), frame_xs)
+        alloc_state, ebuf = ts["d3pg"], ts["ebuf"]
 
     # DDQN frame transitions: (gamma_t, a_t, r_t, gamma_{t+1}) for t < T-1
-    if cfg.cacher == "ddqn" and train:
-        def add_and_update(ts, t):
+    cacher_state, fbuf = ts["ddqn"], ts["fbuf"]
+    if cacher.learns and train:
+        def add_and_update(carry, t):
+            cacher_state, fbuf = carry
             item = {"s": frames["gamma"][t], "a": frames["a_int"][t],
                     "r": frames["r_frame"][t], "s1": frames["gamma"][t + 1]}
-            fbuf = buffer_add(ts["fbuf"], item)
-            ts = {**ts, "fbuf": fbuf}
-            def do_update(ts_in):
+            fbuf = buffer_add(fbuf, item)
+
+            def do_update(cs):
                 kb = jax.random.fold_in(key, t)
-                batch = buffer_sample(ts_in["fbuf"], kb, dq.batch)
-                ddqn_new, _ = ddqn_update(ts_in["ddqn"], dq, batch)
-                return {**ts_in, "ddqn": ddqn_new}
-            ts = jax.lax.cond(fbuf["size"] > dq.batch, do_update,
-                              lambda t_: t_, ts)
-            return ts, None
-        ts, _ = jax.lax.scan(add_and_update, ts,
-                             jnp.arange(env_cfg.T - 1))
+                batch = buffer_sample(fbuf, kb, dq.batch)
+                cs, _ = cacher.update(cs, batch, kb)
+                return cs
+            cacher_state = jax.lax.cond(fbuf["size"] > dq.batch, do_update,
+                                        lambda cs: cs, cacher_state)
+            return (cacher_state, fbuf), None
+        (cacher_state, fbuf), _ = jax.lax.scan(
+            add_and_update, (cacher_state, fbuf),
+            jnp.arange(env_cfg.T - 1))
 
     slot = frames["slot"]
     stats = {
@@ -293,15 +437,9 @@ def _episode_core(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
         "deadline_viol": jnp.mean(slot["viol"]),
         "storage_viol": jnp.mean(frames["storage_viol"]),
     }
+    ts = {"models": models, "d3pg": alloc_state, "ddqn": cacher_state,
+          "ebuf": ebuf, "fbuf": fbuf}
     return ts, stats
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "train"))
-def run_episode(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
-                mods: Optional[ScenarioSchedule] = None):
-    """One episode of Algorithm 1 (single env).  ``mods``: optional
-    unbatched ScenarioSchedule (DESIGN.md §9).  Returns (ts, stats)."""
-    return _episode_core(ts, cfg, key, eps, sigma, train=train, mods=mods)
 
 
 def _batch_mean(x, masks=None):
@@ -312,7 +450,7 @@ def _batch_mean(x, masks=None):
         jnp.sum(masks, axis=-1), 1.0)
 
 
-def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
+def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
                          train: bool = True, masks=None,
                          mods: Optional[ScenarioSchedule] = None):
     """One episode in shared-learner vector-env mode: B cells roll out in
@@ -325,8 +463,9 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
     env_cfg = cfg.env
     d3 = cfg.d3pg_cfg()
     dq = cfg.ddqn_cfg()
-    sched = make_actor_schedule(d3)
+    alloc, cacher = _agents(cfg)
     models: ModelParams = ts["models"]
+    cap_e = d3.buffer
     B = keys.shape[0]
     k_env = jax.vmap(lambda k: jax.random.split(k)[0])(keys)
     key = jax.random.split(keys[0])[1]     # driver key (frames, updates)
@@ -335,6 +474,8 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
     n_frame = max(1, dq.batch // B)
     row_masks = (None if masks is None
                  else jnp.repeat(masks, n_slot, axis=0))
+    act = alloc.batch_act or alloc.act
+    cact = cacher.batch_act or cacher.act
 
     def pool(batch_be):
         """(B, n, ...) per-cell samples -> one (B*n, ...) minibatch."""
@@ -342,108 +483,113 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
             lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
             batch_be)
 
-    def slot_step(carry, xs):
-        k_slot, g = xs                 # g: global slot index t*K + k
-        ts, env = carry
-        ks = jax.random.split(k_slot, 4)
-        s = jax.vmap(lambda e, m, mk: observe(e, env_cfg, m, mk))(
+    def observe_b(env):
+        return jax.vmap(lambda e, m, mk: observe(e, env_cfg, m, mk))(
             env, models, masks)                               # (B, S)
-        if cfg.allocator in ("d3pg", "ddpg"):
-            raw = actor_act(ts["d3pg"]["actor"], d3, sched, s, ks[0])
-            raw = jnp.clip(raw + sigma * jax.random.normal(ks[1], raw.shape),
-                           0.0, 1.0)
-            b, xi = amend_actions(raw, env.req, env.rho, env_cfg.U,
-                                  mask=masks)
-        elif cfg.allocator == "schrs":
-            b, xi = jax.vmap(
-                lambda k, e, m: ga_allocate(k, e, env_cfg, m, cfg.ga))(
-                    jax.random.split(ks[0], B), env, models)
-        else:  # rcars
-            b, xi = jax.vmap(lambda e: rcars_allocate(e, env_cfg))(env)
-        env1, r, m = jax.vmap(
-            lambda e, mo, bb, xx, mk, md: env_step_slot(e, env_cfg, mo, bb,
-                                                        xx, mk, md))(
-            env, models, b, xi, masks, schedule_slot_mod(mods, g + 1))
-        new_ts = ts
-        if cfg.allocator in ("d3pg", "ddpg"):
-            s1 = jax.vmap(lambda e, mo, mk: observe(e, env_cfg, mo, mk))(
-                env1, models, masks)
-            item = {"s": s, "a": jnp.concatenate([b, xi], axis=-1), "r": r,
-                    "s1": s1, "req": env.req, "rho": env.rho,
-                    "req1": env1.req, "rho1": env1.rho}
-            ebuf = buffer_add_batch(ts["ebuf"], item)
-            new_ts = {**ts, "ebuf": ebuf}
-            if train:
-                def do_update(ts_in):
-                    batch = pool(buffer_sample_batch(
-                        ts_in["ebuf"], jax.random.split(ks[2], B), n_slot))
-                    d3pg_new, _ = d3pg_update(ts_in["d3pg"], d3, sched,
-                                              batch, ks[3], mask=row_masks)
-                    return {**ts_in, "d3pg": d3pg_new}
-                new_ts = jax.lax.cond(
-                    jnp.sum(ebuf["size"]) > cfg.warmup, do_update,
-                    lambda t: t, new_ts)
-        stats = {"r": r, "hit": _batch_mean(m["cached"], masks),
-                 "G": _batch_mean(m["G"], masks),
-                 "delay": _batch_mean(m["d_tl"], masks),
-                 "quality": _batch_mean(m["quality"], masks),
-                 "viol": _batch_mean(
-                     (m["d_tl"] > env_cfg.tau).astype(jnp.float32), masks)}
-        return (new_ts, env1), stats
+
+    def slot_stats(r, m):
+        return {"r": r, "hit": _batch_mean(m["cached"], masks),
+                "G": _batch_mean(m["G"], masks),
+                "delay": _batch_mean(m["d_tl"], masks),
+                "quality": _batch_mean(m["quality"], masks),
+                "viol": _batch_mean(
+                    (m["d_tl"] > env_cfg.tau).astype(jnp.float32), masks)}
 
     def frame_step(carry, xs):
         k_frame, t = xs                # t: frame index into the schedule
-        ts, env = carry
+        if alloc.learns:
+            alloc_state, ebuf, env = carry
+        else:
+            alloc_state, (env,) = ts["d3pg"], carry
         kf = jax.random.split(k_frame, 3)
         env = jax.vmap(lambda e, P, md: env_advance_frame(e, env_cfg, P, md))(
             env, schedule_frame_P(mods, t),
             schedule_slot_mod(mods, t * env_cfg.K))
         gamma_t = env.gamma_idx                               # (B,)
-        if cfg.cacher == "ddqn":
-            a_int = ddqn_act(ts["ddqn"], dq, gamma_t, kf[0], eps)
-            rho = jax.vmap(
-                lambda a, c: amend_caching(a, dq, c, env_cfg.C))(
-                    a_int, models.c)                          # (B, M)
-        elif cfg.cacher == "static":
-            a_int = jnp.zeros((B,), jnp.int32)
-            rho = static_popular_cache_batch(models, env_cfg)
-        else:  # random
-            a_int = jnp.zeros((B,), jnp.int32)
-            rho = random_cache_batch(jax.random.split(kf[0], B), models,
-                                     env_cfg)
+        a_int, rho = cact(ts["ddqn"], FrameObs(gamma_t, models), kf[0], step)
         env = jax.vmap(env_set_cache)(env, rho)
-        (ts, env), slot_stats = jax.lax.scan(
-            slot_step, (ts, env),
-            (jax.random.split(kf[1], env_cfg.K),
-             t * env_cfg.K + jnp.arange(env_cfg.K)))
+        size0 = ebuf["size"] if alloc.learns else None        # (B,)
+
+        def slot_step(carry, xs):
+            k_slot, g = xs             # g: global slot index t*K + k
+            if alloc.learns:
+                alloc_state, env, s = carry
+            else:
+                alloc_state, (env,), s = ts["d3pg"], carry, None
+            ks = jax.random.split(k_slot, 4)
+            b, xi = act(alloc_state, SlotObs(s, env, models, masks),
+                        ks[:2], step)
+            env1, r, m = jax.vmap(
+                lambda e, mo, bb, xx, mk, md: env_step_slot(
+                    e, env_cfg, mo, bb, xx, mk, md))(
+                env, models, b, xi, masks, schedule_slot_mod(mods, g + 1))
+            if not alloc.learns:
+                return (env1,), slot_stats(r, m)
+            s1 = observe_b(env1)
+            item = {"s": s, "a": jnp.concatenate([b, xi], axis=-1), "r": r,
+                    "s1": s1, "req": env.req, "rho": env.rho,
+                    "req1": env1.req, "rho1": env1.rho}
+            if train:
+                k_in = g - t * env_cfg.K
+                stored = jnp.sum(jnp.minimum(size0 + k_in + 1, cap_e))
+                alloc_state = jax.lax.cond(
+                    (stored > cfg.warmup) & (jnp.min(size0) > 0),
+                    lambda st: _slot_updates(
+                        alloc, cfg, st, ks, step, row_masks,
+                        lambda k: pool(buffer_sample_batch(
+                            ebuf, jax.random.split(k, B), n_slot))),
+                    lambda st: st, alloc_state)
+            return (alloc_state, env1, s1), (slot_stats(r, m), item)
+
+        g_idx = t * env_cfg.K + jnp.arange(env_cfg.K)
+        slot_keys = jax.random.split(kf[1], env_cfg.K)
+        if alloc.learns:
+            s = observe_b(env)
+            (alloc_state, env, _), (stats, items) = jax.lax.scan(
+                slot_step, (alloc_state, env, s), (slot_keys, g_idx))
+            # one batched write per frame per cell: (K, B, ...) -> (B, K, ...)
+            ebuf = buffer_add_many_batch(
+                ebuf, jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), items))
+        else:
+            (env,), stats = jax.lax.scan(slot_step, (env,),
+                                         (slot_keys, g_idx))
         storage_viol = (jnp.sum(rho * models.c, axis=-1)
                         > env_cfg.C).astype(jnp.float32)      # (B,)
-        r_frame = jnp.mean(slot_stats["r"], axis=0) - storage_viol * env_cfg.Xi
+        r_frame = jnp.mean(stats["r"], axis=0) - storage_viol * env_cfg.Xi
         out = {"gamma": gamma_t, "a_int": a_int, "r_frame": r_frame,
-               "slot": slot_stats, "storage_viol": storage_viol}
-        return (ts, env), out
+               "slot": stats, "storage_viol": storage_viol}
+        carry = ((alloc_state, ebuf, env) if alloc.learns else (env,))
+        return carry, out
 
-    (ts, env), frames = jax.lax.scan(
-        frame_step, (ts, env),
-        (jax.random.split(key, env_cfg.T), jnp.arange(env_cfg.T)))
+    frame_xs = (jax.random.split(key, env_cfg.T), jnp.arange(env_cfg.T))
+    if alloc.learns:
+        (alloc_state, ebuf, env), frames = jax.lax.scan(
+            frame_step, (ts["d3pg"], ts["ebuf"], env), frame_xs)
+    else:
+        (env,), frames = jax.lax.scan(frame_step, (env,), frame_xs)
+        alloc_state, ebuf = ts["d3pg"], ts["ebuf"]
 
-    if cfg.cacher == "ddqn" and train:
-        def add_and_update(ts, t):
+    cacher_state, fbuf = ts["ddqn"], ts["fbuf"]
+    if cacher.learns and train:
+        def add_and_update(carry, t):
+            cacher_state, fbuf = carry
             item = {"s": frames["gamma"][t], "a": frames["a_int"][t],
                     "r": frames["r_frame"][t], "s1": frames["gamma"][t + 1]}
-            fbuf = buffer_add_batch(ts["fbuf"], item)
-            ts = {**ts, "fbuf": fbuf}
-            def do_update(ts_in):
+            fbuf = buffer_add_batch(fbuf, item)
+
+            def do_update(cs):
                 kb = jax.random.fold_in(key, t)
                 batch = pool(buffer_sample_batch(
-                    ts_in["fbuf"], jax.random.split(kb, B), n_frame))
-                ddqn_new, _ = ddqn_update(ts_in["ddqn"], dq, batch)
-                return {**ts_in, "ddqn": ddqn_new}
-            ts = jax.lax.cond(jnp.sum(fbuf["size"]) > dq.batch, do_update,
-                              lambda t_: t_, ts)
-            return ts, None
-        ts, _ = jax.lax.scan(add_and_update, ts,
-                             jnp.arange(env_cfg.T - 1))
+                    fbuf, jax.random.split(kb, B), n_frame))
+                cs, _ = cacher.update(cs, batch, kb)
+                return cs
+            cacher_state = jax.lax.cond(
+                jnp.sum(fbuf["size"]) > dq.batch, do_update,
+                lambda cs: cs, cacher_state)
+            return (cacher_state, fbuf), None
+        (cacher_state, fbuf), _ = jax.lax.scan(
+            add_and_update, (cacher_state, fbuf),
+            jnp.arange(env_cfg.T - 1))
 
     slot = frames["slot"]                  # leaves (T, K, B)
     stats = {
@@ -456,10 +602,12 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, eps, sigma, *,
         "deadline_viol": jnp.mean(slot["viol"], axis=(0, 1)),
         "storage_viol": jnp.mean(frames["storage_viol"], axis=0),
     }
+    ts = {"models": models, "d3pg": alloc_state, "ddqn": cacher_state,
+          "ebuf": ebuf, "fbuf": fbuf}
     return ts, stats
 
 
-def _episode_batch(ts, cfg: T2DRLCfg, keys, eps, sigma, *, train: bool,
+def _episode_batch(ts, cfg: T2DRLCfg, keys, step, *, train: bool,
                    masks=None, mods=None):
     """One episode across the batch; keys: (B,) per-cell episode keys.
 
@@ -469,55 +617,157 @@ def _episode_batch(ts, cfg: T2DRLCfg, keys, eps, sigma, *, train: bool,
     delegates to the shared-learner lockstep core.  ``mods``: optional
     ScenarioSchedule with per-cell (B,)-leading leaves."""
     if cfg.policy == "shared":
-        return _episode_core_shared(ts, cfg, keys, eps, sigma, train=train,
+        return _episode_core_shared(ts, cfg, keys, step, train=train,
                                     masks=masks, mods=mods)
     B = keys.shape[0]
     if B == 1:
         mask = None if masks is None else masks[0]
         mods1 = None if mods is None else jax.tree.map(lambda x: x[0], mods)
         ts1, stats = _episode_core(
-            jax.tree.map(lambda x: x[0], ts), cfg, keys[0], eps, sigma,
+            jax.tree.map(lambda x: x[0], ts), cfg, keys[0], step,
             train=train, mask=mask, mods=mods1)
         expand = functools.partial(jax.tree.map, lambda x: x[None])
         return expand(ts1), expand(stats)
     return jax.vmap(
-        lambda t, k, m, md: _episode_core(t, cfg, k, eps, sigma, train=train,
+        lambda t, k, m, md: _episode_core(t, cfg, k, step, train=train,
                                           mask=m, mods=md))(
         ts, keys, masks, mods)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "train"))
+# -- compiled entry points ----------------------------------------------------
+#
+# On CPU the mostly-sequential episode programs — the single-env scan and
+# the shared-learner lockstep scan — execute measurably faster (~1.15x on
+# the 2-core CI box) under XLA's sequential (non-thunk) runtime, so those
+# entry points are AOT-compiled with that option and cached per (config,
+# train flag, argument structure).  The vmapped independent-learner program
+# (B > 1) is the opposite case — its B stacked per-cell updates benefit
+# from the thunk runtime's scheduling (~2.5x over sequential, measured) —
+# so it keeps the default compile.  run_episode and run_training share the
+# machinery, keeping the B=1 equivalence pin exact; unknown options
+# (future jaxlib) fall back to the default compile, and non-CPU backends
+# use the plain jit path untouched.
+
+_CPU_EPISODE_COMPILER_OPTIONS = {"xla_cpu_use_thunk_runtime": False}
+_AOT_CACHE: dict = {}
+
+
+def _episode_compiler_options(cfg: T2DRLCfg, num_envs: int):
+    """Compiler options for an episode program: sequential runtime for the
+    single-env and shared-learner scans, default for vmapped independent
+    learners (see block comment above)."""
+    if cfg.policy == "shared" or num_envs == 1:
+        return _CPU_EPISODE_COMPILER_OPTIONS
+    return None
+
+
+def _args_signature(tree):
+    try:
+        from jax.api_util import shaped_abstractify
+        leaves, treedef = jax.tree.flatten(tree)
+        return (treedef,) + tuple(shaped_abstractify(l) for l in leaves)
+    except Exception:
+        leaves, treedef = jax.tree.flatten(tree)
+        return (treedef,) + tuple(
+            (jnp.shape(l), jnp.result_type(l)) for l in leaves)
+
+
+def _aot_episode_call(tag, jitted, static_kw, dyn_args, options):
+    """Call ``jitted`` through the AOT cache with the given CPU compiler
+    options; fall back to the plain jit path off-CPU, for ``options=None``,
+    or if the options are rejected (future jaxlib)."""
+    if options is None or jax.default_backend() != "cpu":
+        return jitted(*dyn_args, **static_kw)
+    sig = ((tag,) + tuple(sorted(static_kw.items()))
+           + _args_signature(dyn_args))
+    compiled = _AOT_CACHE.get(sig)
+    if compiled is None:
+        lowered = jitted.lower(*dyn_args, **static_kw)
+        try:
+            compiled = lowered.compile(compiler_options=options)
+        except Exception:
+            compiled = lowered.compile()
+        _AOT_CACHE[sig] = compiled
+    return compiled(*dyn_args)
+
+
+def _run_episode_impl(ts, key, eps, sigma, mods=None, *, cfg: T2DRLCfg,
+                      train: bool = True):
+    return _episode_core(ts, cfg, key, {"eps": eps, "sigma": sigma},
+                         train=train, mods=mods)
+
+
+_run_episode_jit = functools.partial(
+    jax.jit, static_argnames=("cfg", "train"))(_run_episode_impl)
+
+
+def run_episode(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
+                mods: Optional[ScenarioSchedule] = None):
+    """One episode of Algorithm 1 (single env).  ``mods``: optional
+    unbatched ScenarioSchedule (DESIGN.md §9).  Returns (ts, stats)."""
+    return _aot_episode_call("episode", _run_episode_jit,
+                             {"cfg": cfg, "train": train},
+                             (ts, key, eps, sigma, mods),
+                             _episode_compiler_options(cfg, 1))
+
+
+def _run_training_impl(ts, key, ep_idx, masks=None, mods=None, *,
+                       cfg: T2DRLCfg, train: bool = True):
+    B = ts["models"].a1.shape[0]
+    alloc, _ = _agents(cfg)
+    e = ep_idx.astype(jnp.float32)
+    xs = {"keys": jax.vmap(
+              lambda ep: _batch_keys(jax.random.fold_in(key, ep), B))(ep_idx),
+          "eps": episode_epsilon(cfg, e),
+          "sigma": episode_sigma(cfg, e)}
+    if train and alloc.learns and cfg.lr_schedule != "const":
+        scale = episode_lr_scale(cfg, e)
+        xs["lr_actor"] = cfg.lr_actor * scale
+        xs["lr_critic"] = cfg.lr_critic * scale
+
+    def ep_step(ts, x):
+        step = {k: v for k, v in x.items() if k != "keys"}
+        return _episode_batch(ts, cfg, x["keys"], step, train=train,
+                              masks=masks, mods=mods)
+
+    return jax.lax.scan(ep_step, ts, xs)
+
+
+_run_training_jit = functools.partial(
+    jax.jit, static_argnames=("cfg", "train"),
+    donate_argnums=(0,))(_run_training_impl)
+
+
 def run_training(ts, cfg: T2DRLCfg, key, ep_idx, masks=None, mods=None, *,
                  train: bool = True):
-    """Scan ``_episode_batch`` over the (absolute) episode indices
+    """Scan the batched episode over the (absolute) episode indices
     ``ep_idx`` — a whole multi-episode, multi-cell run in one compiled call.
-    Epsilon/sigma schedules are traced functions of the episode index.
-    ``mods``: optional ScenarioSchedule with per-cell (B,)-leading leaves,
-    replayed every episode.  Returns (ts, history) with history leaves of
-    shape (len(ep_idx), B)."""
+    Epsilon/sigma (and any LR-warmdown) schedules are precomputed arrays
+    fed to the scan as inputs.  ``mods``: optional ScenarioSchedule with
+    per-cell (B,)-leading leaves, replayed every episode.
+
+    ``ts`` is DONATED to the computation (its buffers are reused in place);
+    use the returned state and do not touch the argument afterwards.
+    Returns (ts, history) with history leaves of shape (len(ep_idx), B)."""
     B = ts["models"].a1.shape[0]
-
-    def ep_step(ts, ep):
-        k_ep = jax.random.fold_in(key, ep)
-        e = ep.astype(jnp.float32)
-        eps = episode_epsilon(cfg, e)
-        sigma = episode_sigma(cfg, e)
-        return _episode_batch(ts, cfg, _batch_keys(k_ep, B), eps, sigma,
-                              train=train, masks=masks, mods=mods)
-
-    return jax.lax.scan(ep_step, ts, ep_idx)
+    return _aot_episode_call("train", _run_training_jit,
+                             {"cfg": cfg, "train": train},
+                             (ts, key, ep_idx, masks, mods),
+                             _episode_compiler_options(cfg, B))
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def run_eval(ts, cfg: T2DRLCfg, key, ep_idx, masks=None, mods=None):
     """Greedy evaluation scan: eps = sigma = 0, no updates, ``ts`` is not
-    threaded between episodes.  Returns history leaves (len(ep_idx), B)."""
+    threaded between episodes (and, unlike ``run_training``, not donated).
+    Returns history leaves (len(ep_idx), B)."""
     B = ts["models"].a1.shape[0]
     zero = jnp.float32(0.0)
+    step = {"eps": zero, "sigma": zero}
 
     def ep_step(_, ep):
         k_ep = jax.random.fold_in(key, ep)
-        _, stats = _episode_batch(ts, cfg, _batch_keys(k_ep, B), zero, zero,
+        _, stats = _episode_batch(ts, cfg, _batch_keys(k_ep, B), step,
                                   train=False, masks=masks, mods=mods)
         return None, stats
 
@@ -679,14 +929,14 @@ def eval_t2drl(ts, cfg: T2DRLCfg, *, episodes: int = 10, seed: int = 10_000,
     return {k: jnp.mean(v) for k, v in stats.items()}
 
 
-# -- policy deployment (inference-only, DESIGN.md §11) ------------------------
+# -- policy deployment (inference-only, DESIGN.md §11/§12) --------------------
 #
-# ``export_policy`` slices the learner-free parameters out of a train state
-# so a trained policy can be checkpointed (repro.checkpoint.save_train_state)
-# and served — e.g. by the request-level fleet twin (repro.fleet) — without
-# dragging replay buffers, target networks, or optimizer moments along.
-# ``greedy_slot_action`` / ``greedy_frame_cache`` are the single-env greedy
-# inference entry points every allocator/cacher combination shares.
+# ``export_policy`` asks each Agent for its inference-only parameter slice
+# (``Agent.export``), so checkpointing (repro.checkpoint.save_train_state)
+# and the request-level fleet twin (repro.fleet) never branch on agent
+# kinds.  ``greedy_slot_action`` / ``greedy_frame_cache`` are the greedy
+# inference entry points every allocator/cacher combination shares,
+# delegating to ``Agent.greedy``.
 
 
 def export_policy(ts, cfg: T2DRLCfg, cell: int = 0):
@@ -713,14 +963,15 @@ def export_policy(ts, cfg: T2DRLCfg, cell: int = 0):
         Model zoos are *not* included — they are environment state, passed
         to the twin separately.
     """
+    alloc, cacher = _agents(cfg)
     batched_agents = (ts["models"].a1.ndim == 2 and cfg.policy != "shared")
     take = ((lambda x: jax.tree.map(lambda v: v[cell], x))
             if batched_agents else (lambda x: x))
     pol = {}
-    if cfg.allocator in ("d3pg", "ddpg"):
-        pol["actor"] = take(ts["d3pg"]["actor"])
-    if cfg.cacher == "ddqn":
-        pol["ddqn"] = {"q": take(ts["ddqn"]["q"])}
+    if alloc.learns:
+        pol.update(alloc.export(take(ts["d3pg"])))
+    if cacher.learns:
+        pol.update(cacher.export(take(ts["ddqn"])))
     return pol
 
 
@@ -731,24 +982,13 @@ def greedy_slot_action(policy, cfg: T2DRLCfg, env: EnvState,
     Returns the amended ``(b, xi)`` exactly as the training-time slot step
     would under ``sigma = 0``; ``key`` drives the diffusion actor's reverse
     chain (D3PG) or the GA (SCHRS)."""
-    if cfg.allocator in ("d3pg", "ddpg"):
-        d3 = cfg.d3pg_cfg()
-        sched = make_actor_schedule(d3)
-        s = observe(env, cfg.env, models, mask)
-        raw = actor_act(policy["actor"], d3, sched, s, key)
-        return amend_actions(raw, env.req, env.rho, cfg.env.U, mask=mask)
-    if cfg.allocator == "schrs":
-        return ga_allocate(key, env, cfg.env, models, cfg.ga)
-    return rcars_allocate(env, cfg.env)
+    alloc, _ = _agents(cfg)
+    s = observe(env, cfg.env, models, mask) if alloc.learns else None
+    return alloc.greedy(policy, SlotObs(s, env, models, mask), key)
 
 
 def greedy_frame_cache(policy, cfg: T2DRLCfg, models: ModelParams,
                        gamma_idx, key):
     """Greedy (eps = 0) per-frame caching vector rho for any cacher."""
-    if cfg.cacher == "ddqn":
-        dq = cfg.ddqn_cfg()
-        a_int = ddqn_act(policy["ddqn"], dq, gamma_idx, key, 0.0)
-        return amend_caching(a_int, dq, models.c, cfg.env.C)
-    if cfg.cacher == "static":
-        return static_popular_cache(models, cfg.env)
-    return random_cache(key, models, cfg.env)
+    _, cacher = _agents(cfg)
+    return cacher.greedy(policy, FrameObs(gamma_idx, models), key)

@@ -1,0 +1,322 @@
+"""Agent protocol (DESIGN.md §12): bit-identity pins of every refactored
+agent's init/act/update against the legacy numeric cores, the generic
+vmap_agent batching wrapper, the per-frame batched replay writes, the
+replay-sampling contract, and the new schedule / updates_per_slot levers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agents import (FrameObs, SlotObs, d3pg_allocator, ddqn_cacher,
+                          make_allocator, make_cacher, rcars_allocator,
+                          schrs_allocator, vmap_agent)
+from repro.core import (EnvCfg, T2DRLCfg, actor_act, amend_actions,
+                        amend_caching, d3pg_init, d3pg_init_batch,
+                        d3pg_update, d3pg_update_batch, ddqn_act, ddqn_init,
+                        ddqn_update, env_reset, episode_epsilon,
+                        episode_lr_scale, episode_sigma, make_actor_schedule,
+                        make_models, train_t2drl)
+from repro.core.baselines import (ga_allocate, random_cache, rcars_allocate,
+                                  static_popular_cache)
+from repro.core.buffers import (buffer_add, buffer_add_many, buffer_init,
+                                buffer_sample)
+
+KEY = jax.random.PRNGKey(0)
+ENV = EnvCfg(U=4, M=4, T=3, K=3)
+CFG = T2DRLCfg(env=ENV, warmup=5, lr_actor=1e-4, lr_critic=1e-4,
+               lr_ddqn=1e-3, L=2, eps_decay_episodes=4, seed=0)
+
+D3 = CFG.d3pg_cfg()
+DQ = CFG.ddqn_cfg()
+STEP = {"eps": jnp.float32(0.3), "sigma": jnp.float32(0.1)}
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _slot_batch(n=16):
+    ks = jax.random.split(KEY, 6)
+    return {
+        "s": jax.random.normal(ks[0], (n, D3.state_dim)),
+        "a": jax.random.uniform(ks[1], (n, D3.action_dim)),
+        "r": jax.random.normal(ks[2], (n,)),
+        "s1": jax.random.normal(ks[3], (n, D3.state_dim)),
+        "req": jax.random.randint(ks[4], (n, ENV.U), 0, ENV.M),
+        "rho": jnp.ones((n, ENV.M)),
+        "req1": jax.random.randint(ks[5], (n, ENV.U), 0, ENV.M),
+        "rho1": jnp.ones((n, ENV.M)),
+    }
+
+
+# -- d3pg agent == legacy d3pg_* ----------------------------------------------
+
+def test_d3pg_agent_init_bit_identical():
+    _tree_equal(d3pg_allocator(D3).init(KEY), d3pg_init(KEY, D3))
+
+
+def test_d3pg_agent_act_composes_actor_noise_amender():
+    alloc = d3pg_allocator(D3)
+    state = alloc.init(KEY)
+    models = make_models(KEY, ENV)
+    env = env_reset(jax.random.PRNGKey(3), ENV)._replace(rho=jnp.ones(ENV.M))
+    s = jax.random.normal(KEY, (D3.state_dim,))
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    b, xi = alloc.act(state, SlotObs(s, env, models, None), ks[:2], STEP)
+    sched = make_actor_schedule(D3)
+    raw = actor_act(state["actor"], D3, sched, s, ks[0])
+    raw = jnp.clip(raw + STEP["sigma"] * jax.random.normal(ks[1], raw.shape),
+                   0.0, 1.0)
+    b_ref, xi_ref = amend_actions(raw, env.req, env.rho, ENV.U)
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(b_ref))
+    np.testing.assert_array_equal(np.asarray(xi), np.asarray(xi_ref))
+
+
+def test_d3pg_agent_update_bit_identical():
+    alloc = d3pg_allocator(D3)
+    params = alloc.init(KEY)
+    batch = _slot_batch()
+    new_a, metrics_a = alloc.update(params, batch, KEY)
+    sched = make_actor_schedule(D3)
+    new_l, metrics_l = d3pg_update(params, D3, sched, batch, KEY)
+    _tree_equal(new_a, new_l)
+    _tree_equal(metrics_a, metrics_l)
+
+
+def test_d3pg_agent_update_reserved_aux_keys():
+    """mask / lr_* ride in the batch dict and must reproduce the legacy
+    keyword arguments exactly (and not leak into the minibatch)."""
+    alloc = d3pg_allocator(D3)
+    params = alloc.init(KEY)
+    batch = _slot_batch()
+    mask = jnp.array([1.0, 1.0, 0.0, 0.0])
+    lr = jnp.float32(3e-4)
+    new_a, _ = alloc.update(
+        params, {**batch, "mask": mask, "lr_actor": lr, "lr_critic": lr},
+        KEY)
+    sched = make_actor_schedule(D3)
+    new_l, _ = d3pg_update(params, D3, sched, batch, KEY, mask=mask,
+                           lr_a=lr, lr_c=lr)
+    _tree_equal(new_a, new_l)
+
+
+# -- ddqn agent == legacy ddqn_* ----------------------------------------------
+
+def test_ddqn_agent_init_act_update_bit_identical():
+    cacher = ddqn_cacher(DQ, ENV)
+    _tree_equal(cacher.init(KEY), ddqn_init(KEY, DQ))
+    state = cacher.init(KEY)
+    models = make_models(KEY, ENV)
+    gamma = jnp.int32(1)
+    a_int, rho = cacher.act(state, FrameObs(gamma, models), KEY, STEP)
+    a_ref = ddqn_act(state, DQ, gamma, KEY, STEP["eps"])
+    assert int(a_int) == int(a_ref)
+    np.testing.assert_array_equal(
+        np.asarray(rho), np.asarray(amend_caching(a_ref, DQ, models.c,
+                                                  ENV.C)))
+    batch = {"s": jnp.zeros(8, jnp.int32), "a": jnp.ones(8, jnp.int32),
+             "r": jnp.full(8, 2.0), "s1": jnp.ones(8, jnp.int32)}
+    new_a, metrics = cacher.update(state, batch, KEY)
+    new_l, loss = ddqn_update(state, DQ, batch)
+    _tree_equal(new_a, new_l)
+    assert float(metrics["loss"]) == float(loss)
+
+
+# -- baseline agents == legacy baseline fns -----------------------------------
+
+def test_baseline_agents_match_legacy_functions():
+    models = make_models(KEY, ENV)
+    env = env_reset(jax.random.PRNGKey(3), ENV)._replace(
+        rho=static_popular_cache(models, ENV))
+    obs = SlotObs(None, env, models, None)
+    b, xi = rcars_allocator(ENV).act({}, obs, jax.random.split(KEY, 2), STEP)
+    b_ref, xi_ref = rcars_allocate(env, ENV)
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(b_ref))
+    np.testing.assert_array_equal(np.asarray(xi), np.asarray(xi_ref))
+    ks = jax.random.split(jax.random.PRNGKey(9), 2)
+    b, xi = schrs_allocator(ENV, CFG.ga).act({}, obs, ks, STEP)
+    b_ref, xi_ref = ga_allocate(ks[0], env, ENV, models, CFG.ga)
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(b_ref))
+    np.testing.assert_array_equal(np.asarray(xi), np.asarray(xi_ref))
+    _, rho = make_cacher("static", DQ, ENV).act({}, FrameObs(env.gamma_idx,
+                                                             models), KEY,
+                                                STEP)
+    np.testing.assert_array_equal(
+        np.asarray(rho), np.asarray(static_popular_cache(models, ENV)))
+    _, rho = make_cacher("random", DQ, ENV).act({}, FrameObs(env.gamma_idx,
+                                                             models), KEY,
+                                                STEP)
+    np.testing.assert_array_equal(
+        np.asarray(rho), np.asarray(random_cache(KEY, models, ENV)))
+
+
+def test_make_allocator_rejects_unknown_names():
+    with pytest.raises(ValueError, match="unknown allocator"):
+        make_allocator("nope", ENV, D3, CFG.ga)
+    with pytest.raises(ValueError, match="unknown cacher"):
+        make_cacher("nope", DQ, ENV)
+
+
+# -- vmap_agent and the compat shims ------------------------------------------
+
+def _stacked_batches(B, n=8):
+    """B structurally-identical minibatches with per-cell float variation
+    (integer leaves — request ids — keep their dtype)."""
+    def cell(i):
+        return jax.tree.map(
+            lambda x: x if jnp.issubdtype(x.dtype, jnp.integer)
+            else x * (0.5 + 0.5 * i), _slot_batch(n))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[cell(i)
+                                                     for i in range(B)])
+
+
+def test_vmap_agent_equals_per_cell_calls():
+    B = 3
+    keys = jax.random.split(KEY, B)
+    batched = vmap_agent(d3pg_allocator(D3))
+    params_b = batched.init(keys)
+    for i in range(B):
+        _tree_equal(jax.tree.map(lambda x: x[i], params_b),
+                    d3pg_init(keys[i], D3))
+    batch_b = _stacked_batches(B)
+    upd_keys = jax.random.split(jax.random.PRNGKey(2), B)
+    new_b, _ = batched.update(params_b, batch_b, upd_keys)
+    sched = make_actor_schedule(D3)
+    for i in range(B):
+        ref, _ = d3pg_update(jax.tree.map(lambda x: x[i], params_b), D3,
+                             sched, jax.tree.map(lambda x: x[i], batch_b),
+                             upd_keys[i])
+        _tree_equal(jax.tree.map(lambda x: x[i], new_b), ref)
+
+
+def test_compat_batch_shims_route_through_protocol():
+    B = 2
+    keys = jax.random.split(KEY, B)
+    params_b = d3pg_init_batch(keys, D3)
+    _tree_equal(params_b, vmap_agent(d3pg_allocator(D3)).init(keys))
+    batch_b = _stacked_batches(B)
+    sched = make_actor_schedule(D3)
+    new_b, losses = d3pg_update_batch(params_b, D3, sched, batch_b, keys)
+    assert losses["critic_loss"].shape == (B,)
+    ref, _ = d3pg_update(jax.tree.map(lambda x: x[0], params_b), D3, sched,
+                         jax.tree.map(lambda x: x[0], batch_b), keys[0])
+    _tree_equal(jax.tree.map(lambda x: x[0], new_b), ref)
+
+
+# -- replay buffers: batched writes + sampling contract (DESIGN.md §12) -------
+
+def test_buffer_add_many_equals_sequential_adds_with_wraparound():
+    item = lambda i: {"x": jnp.full((2,), float(i)), "y": jnp.int32(i)}
+    many = lambda lo, hi: {"x": jnp.stack([jnp.full((2,), float(i))
+                                          for i in range(lo, hi)]),
+                           "y": jnp.arange(lo, hi, dtype=jnp.int32)}
+    a = buffer_init(5, item(0))
+    b = buffer_init(5, item(0))
+    for i in range(3):
+        a = buffer_add(a, item(i))
+    b = buffer_add_many(b, many(0, 3))
+    _tree_equal(a, b)
+    # wrap: 4 more items into capacity 5 (ptr wraps past the end)
+    for i in range(3, 7):
+        a = buffer_add(a, item(i))
+    b = buffer_add_many(b, many(3, 7))
+    _tree_equal(a, b)
+    assert int(b["ptr"]) == 2 and int(b["size"]) == 5
+    # n > capacity would scatter duplicate indices (order-dependent):
+    # refused loudly instead of silently losing determinism
+    with pytest.raises(ValueError, match="capacity"):
+        buffer_add_many(buffer_init(3, item(0)), many(0, 4))
+
+
+def test_buffer_sample_contract():
+    """The with-replacement draw is the documented contract (DESIGN.md
+    §12): in-range indices, stored items only, deterministic per key."""
+    buf = buffer_init(8, {"y": jnp.int32(0)})
+    for i in range(5):
+        buf = buffer_add(buf, {"y": jnp.int32(10 + i)})
+    s1 = buffer_sample(buf, KEY, 16)
+    s2 = buffer_sample(buf, KEY, 16)
+    np.testing.assert_array_equal(np.asarray(s1["y"]), np.asarray(s2["y"]))
+    assert set(np.asarray(s1["y"]).tolist()) <= {10, 11, 12, 13, 14}
+    # never samples the empty tail of a partially-filled buffer
+    assert 0 not in np.asarray(s1["y"]).tolist()
+    # empty buffer degrades to row 0 rather than out-of-bounds
+    empty = buffer_init(4, {"y": jnp.int32(0)})
+    assert set(np.asarray(buffer_sample(empty, KEY, 4)["y"]).tolist()) == {0}
+
+
+# -- schedules + updates_per_slot ---------------------------------------------
+
+def test_epsilon_schedules_share_endpoints():
+    lin = CFG
+    cos = dataclasses.replace(CFG, eps_schedule="cosine")
+    for cfg in (lin, cos):
+        assert float(episode_epsilon(cfg, jnp.float32(0.0))) == cfg.eps_start
+        np.testing.assert_allclose(
+            float(episode_epsilon(cfg, jnp.float32(cfg.eps_decay_episodes))),
+            cfg.eps_end, rtol=1e-6)
+    # cosine holds exploration longer early on
+    mid = jnp.float32(1.0)
+    assert float(episode_epsilon(cos, mid)) > float(episode_epsilon(lin, mid))
+    # sigma follows the same shape and is zero for non-learned allocators
+    assert float(episode_sigma(cos, mid)) > float(episode_sigma(lin, mid))
+    rc = dataclasses.replace(CFG, allocator="rcars")
+    assert float(episode_sigma(rc, mid)) == 0.0
+    # unknown names raise instead of silently falling back to linear
+    with pytest.raises(ValueError, match="eps_schedule"):
+        episode_epsilon(dataclasses.replace(CFG, eps_schedule="nope"), mid)
+
+
+def test_lr_scale_schedule_endpoints_and_const_default():
+    cfg = dataclasses.replace(CFG, lr_schedule="cosine",
+                              lr_warmdown_episodes=10, lr_end_scale=0.25)
+    assert float(episode_lr_scale(cfg, jnp.float32(0.0))) == 1.0
+    np.testing.assert_allclose(
+        float(episode_lr_scale(cfg, jnp.float32(10.0))), 0.25, rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(episode_lr_scale(CFG, jnp.arange(4, dtype=jnp.float32))),
+        np.ones(4, np.float32))
+    with pytest.raises(ValueError, match="lr_schedule"):
+        episode_lr_scale(dataclasses.replace(CFG, lr_schedule="nope"),
+                         jnp.float32(1.0))
+    # warmdown horizon of 0 would be an instant LR cliff, not a warmdown
+    with pytest.raises(ValueError, match="lr_warmdown_episodes"):
+        episode_lr_scale(dataclasses.replace(CFG, lr_schedule="cosine"),
+                         jnp.float32(1.0))
+
+
+def test_scheduled_training_runs_and_differs_from_default():
+    sched_cfg = dataclasses.replace(
+        CFG, eps_schedule="cosine", lr_schedule="cosine",
+        lr_warmdown_episodes=3, lr_end_scale=0.2)
+    _, h_sched = train_t2drl(sched_cfg, episodes=3, num_envs=1)
+    _, h_base = train_t2drl(CFG, episodes=3, num_envs=1)
+    r = np.asarray(h_sched["episode_reward"])
+    assert r.shape == (3,) and np.all(np.isfinite(r))
+    assert not np.array_equal(r, np.asarray(h_base["episode_reward"]))
+
+
+@pytest.mark.parametrize("policy", ["independent", "shared"])
+def test_updates_per_slot_trades_rollouts_for_gradient_steps(policy):
+    base = dataclasses.replace(CFG, policy=policy)
+    multi = dataclasses.replace(base, updates_per_slot=2)
+    ts1, h1 = train_t2drl(base, episodes=2, num_envs=2)
+    ts2, h2 = train_t2drl(multi, episodes=2, num_envs=2)
+    assert np.all(np.isfinite(np.asarray(h2["episode_reward"])))
+    # same rollouts (same PRNG stream), different learner trajectories
+    np.testing.assert_array_equal(np.asarray(ts1["ebuf"]["size"]),
+                                  np.asarray(ts2["ebuf"]["size"]))
+    a1 = jax.tree.leaves(ts1["d3pg"])
+    a2 = jax.tree.leaves(ts2["d3pg"])
+    assert any(not np.array_equal(x, y) for x, y in zip(a1, a2))
+
+
+def test_updates_per_slot_validation():
+    bad = dataclasses.replace(CFG, updates_per_slot=0)
+    with pytest.raises(ValueError, match="updates_per_slot"):
+        train_t2drl(bad, episodes=1, num_envs=1)

@@ -191,6 +191,36 @@ def test_checkpoint_roundtrip_bit_identity(tmp_path, ts_t2drl, fleet_res):
     np.testing.assert_array_equal(served["hist"], fleet_res["hist"])
 
 
+def test_batched_shared_train_state_roundtrip_bit_identity(tmp_path):
+    """The unified TrainState layout (DESIGN.md §12) checkpoints uniformly
+    across vector-env modes: a batched shared-learner state (per-cell
+    models/buffers, single learner) restores bit-identically and evaluates
+    identically — no agent-kind or layout special-casing in the codec."""
+    cfg = dataclasses.replace(CFG, policy="shared")
+    ts, _ = train_t2drl(cfg, episodes=2, num_envs=2)
+    path = save_train_state(str(tmp_path / "shared.msgpack"), ts,
+                            meta={"policy": "shared", "num_envs": 2})
+    back, meta = load_train_state(path)
+    assert meta["num_envs"] == 2
+    assert set(back) == {"models", "d3pg", "ddqn", "ebuf", "fbuf"}
+    for a, b in zip(jax.tree.leaves(ts), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ev_live = eval_t2drl(ts, cfg, episodes=2)
+    ev_back = eval_t2drl(back, cfg, episodes=2)
+    for k in ev_live:
+        assert float(ev_live[k]) == float(ev_back[k]), k
+    # the exported policy slice is identical too (shared learner: no cell
+    # slicing), and serves through the twin deterministically
+    pol_live = export_policy(ts, cfg)
+    pol_back = export_policy(back, cfg)
+    for a, b in zip(jax.tree.leaves(pol_live), jax.tree.leaves(pol_back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    r1 = simulate_fleet(ts, cfg, FCFG, seed=2)
+    r2 = simulate_fleet(back, cfg, FCFG, seed=2)
+    for k in SCALARS:
+        assert r1[k] == r2[k], k
+
+
 def test_load_rejects_unknown_format(tmp_path):
     import msgpack
     p = tmp_path / "bad.msgpack"
