@@ -1,0 +1,109 @@
+"""Population-based hyperparameter sweep over the fused independent core.
+
+Trains a grid of T2DRL hyperparameter configs (epsilon schedules, actor/
+critic/DDQN learning rates, reward shaping — ``repro.core.population``) as
+ONE fused ``run_training`` call per static group, greedily evaluates every
+member, and reports the leaderboard against the training-free RCARS
+baseline on the same environment.  This is the ISSUE-6 attack on the
+ROADMAP convergence gap: a 16-config sweep costs one compile plus B=16
+fused training instead of 16 sequential runs.
+
+Results land in ``experiments/bench/population.json``::
+
+  {"n_members": 16, "episodes": ..., "groups": [...], "train_s": ...,
+   "compile_s": ..., "leaderboard": [{"label": ..., "utility": ...,
+   "reward": ...}, ...], "best": {...}, "rcars": {...},
+   "best_vs_rcars_utility": ...}
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import EnvCfg, default_grid, rank_population, train_population
+
+from .common import method_cfg, save_json, train_and_eval
+
+SMOKE_ENV = EnvCfg(U=6, M=6, T=6, K=6)
+
+
+def run(*, episodes: int = 40, eval_episodes: int = 4, env: EnvCfg = None,
+        grid=None, seed: int = 0, smoke: bool = False,
+        out_name: str = "population.json", top: int = 8):
+    """Sweep ``grid`` (default: the stock 16-member grid) and report the
+    best member vs RCARS.  ``smoke`` shrinks the env and episode counts to
+    CI scale while keeping the full 16-member population — the one-compile
+    -per-group property under test doesn't depend on episode counts."""
+    if smoke:
+        env = SMOKE_ENV if env is None else env
+        episodes, eval_episodes = min(episodes, 4), min(eval_episodes, 2)
+    env = EnvCfg() if env is None else env
+    grid = default_grid() if grid is None else grid
+    cfg = method_cfg("t2drl", env=env, episodes=episodes, seed=seed,
+                     policy="independent")
+
+    t0 = time.time()
+    results, groups = train_population(cfg, grid, episodes=episodes,
+                                       eval_episodes=eval_episodes,
+                                       seed=seed, log=print)
+    train_s = time.time() - t0
+    ranked = rank_population(results, by="utility")
+
+    _, rcars = train_and_eval("rcars", env=env, episodes=episodes,
+                              eval_episodes=eval_episodes, seed=seed)
+
+    leaderboard = [{"label": r["label"],
+                    "utility": r["eval"]["utility"],
+                    "reward": r["eval"]["episode_reward"],
+                    "hit_ratio": r["eval"]["hit_ratio"]}
+                   for r in ranked]
+    best = leaderboard[0]
+    payload = {
+        "n_members": len(grid),
+        "episodes": episodes,
+        "eval_episodes": eval_episodes,
+        "env": {"U": env.U, "M": env.M, "T": env.T, "K": env.K},
+        "smoke": smoke,
+        "n_compiles": len(groups),
+        "groups": groups,
+        "train_s": round(train_s, 1),
+        "device_count": jax.device_count(),
+        "leaderboard": leaderboard,
+        "best": best,
+        "rcars": {"utility": rcars["utility"],
+                  "reward": rcars["episode_reward"],
+                  "hit_ratio": rcars["hit_ratio"]},
+        "best_vs_rcars_utility": best["utility"] / rcars["utility"],
+    }
+    path = save_json(out_name, payload)
+
+    print(f"\npopulation sweep: {len(grid)} members, {len(groups)} "
+          f"compile group(s), {train_s:.0f}s train+eval")
+    print(f"{'member':44s} {'utility':>8s} {'reward':>9s} {'hit':>6s}")
+    for row in leaderboard[:top]:
+        print(f"{row['label']:44s} {row['utility']:8.2f} "
+              f"{row['reward']:9.2f} {row['hit_ratio']:6.3f}")
+    print(f"{'RCARS baseline':44s} {rcars['utility']:8.2f} "
+          f"{rcars['episode_reward']:9.2f} {rcars['hit_ratio']:6.3f}")
+    print(f"best vs RCARS utility: {payload['best_vs_rcars_utility']:.3f}x "
+          f"-> {path}")
+    return payload
+
+
+def run_smoke():
+    """CI gate: the full 16-member grid must sweep in ONE compiled call
+    and produce a complete leaderboard."""
+    payload = run(smoke=True)
+    assert payload["n_members"] >= 16, payload["n_members"]
+    if payload["n_compiles"] != 1:
+        raise SystemExit(f"population smoke: expected 1 compile group, got "
+                         f"{payload['n_compiles']}")
+    if len(payload["leaderboard"]) != payload["n_members"]:
+        raise SystemExit("population smoke: incomplete leaderboard")
+    print("population smoke OK")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -8,7 +8,15 @@ throughput section measures end-to-end multi-cell training of the batched
 vector-env core (DESIGN.md §6/§12) for B in {1, 8}: in shared-learner mode
 the per-slot optimizer step costs the same at any B, so B=8 must beat B=1's
 aggregate throughput by well over 2x even on CPU; the fully independent
-multi-seed mode is reported alongside for comparison.
+multi-seed mode is measured in BOTH execution paths — the fused batched
+program (DESIGN.md §13, the default) and the legacy per-learner ``vmap``
+reference — so the ISSUE-6 before/after (vmap was *slower* at B=8 than
+running B=1 eight times) stays pinned in runtime.json.
+
+``--breakdown`` adds a per-stage attribution for the independent path:
+compile time, rollout + replay-write time (a ``train=False`` episode runs
+the identical program minus learner updates), and the update chain
+(train minus rollout) — the stage the fused rewrite attacks.
 
 Methodology: each configuration is timed over ``reps`` repetitions of one
 fully-jitted ``run_training`` call (compile excluded and reported
@@ -22,9 +30,14 @@ throughput section also records the pre-refactor shared-learner B=8
 baseline (measured at the PR-4 parent commit on the 2-core reference box
 with the same min-of-N protocol) and the speedup against it.
 
-``--smoke`` is the CI mode: shared-learner B=8 only, 2 episodes, and a
-hard floor on episodes·envs/sec (exit 1 below it) so the compiled-path
-throughput cannot silently regress.
+``--smoke`` is the CI mode (2 episodes each): the shared-learner B=8
+throughput floor, plus the ISSUE-6 independent-mode gates — fused B=8
+must at least match the legacy vmap path (no more vmap slowdown) and hold
+B=1's aggregate throughput (>=1.0x with 2+ cores; 0.85x on a single-core
+box, where the update chain is compute-bound and batching has nothing to
+amortize).  When more than one XLA device is visible (CI forces two via
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``) it also runs a
+tiny ``run_training_sharded`` call so the shard_map path keeps compiling.
 """
 from __future__ import annotations
 
@@ -36,9 +49,12 @@ import time
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+
 from repro.core import (EnvCfg, GACfg, T2DRLCfg, actor_act, env_reset,
                         ga_allocate, make_actor_schedule, make_models,
-                        observe, run_training, t2drl_init, t2drl_init_batch)
+                        observe, run_training, run_training_sharded,
+                        t2drl_init, t2drl_init_batch)
 from .common import OUT_DIR, save_json
 
 # Pre-refactor (PR 3, commit ae1b38e) shared-learner B=8 throughput on the
@@ -51,6 +67,17 @@ PRE_REFACTOR_SHARED_B8 = 10.65    # episodes*envs/sec
 # runners pass, far above a structural regression (e.g. losing the scan
 # slimming or the sequential-runtime compile path).
 SMOKE_FLOOR = 3.0                 # episodes*envs/sec, shared B=8
+
+# The independent-mode smoke gates (ISSUE 6).  Fused B=8 must never lose
+# to the legacy vmap path it replaced, and must hold B=1's aggregate
+# throughput.  The B8/B1 parity gate presumes >=2 cores (the reference box
+# and every GitHub runner); on a single-core box the independent update
+# chain is purely compute-bound — the work grows linearly with B and
+# batching has nothing left to amortize — so a small concession is
+# allowed there instead of skipping the gate entirely.
+FUSED_VS_VMAP_FLOOR = 1.0         # fused B=8 vs vmap B=8, always
+B8_PARITY_FLOOR = 1.0             # fused B=8 vs B=1 aggregate, >=2 cores
+B8_PARITY_FLOOR_1CORE = 0.85      # same gate on a single-core box
 
 
 def _merge_runtime_json(payload: dict) -> str:
@@ -111,15 +138,18 @@ def run(users=(10, 12, 14, 16, 18), seed: int = 0, verbose=True):
     return out
 
 
-def _throughput_cfg(policy: str) -> T2DRLCfg:
+def _throughput_cfg(policy: str, impl: str = "fused") -> T2DRLCfg:
     """The paper workload the throughput section (and its pre-refactor
-    baseline) is pinned to."""
+    baseline) is pinned to.  ``impl`` selects the independent-mode
+    execution path (DESIGN.md §13): "fused" (the default batched program)
+    or "vmap" (the legacy reference — the ISSUE-6 "before" numbers)."""
     return T2DRLCfg(env=EnvCfg(U=10, M=10, T=10, K=10), policy=policy,
                     warmup=100, lr_actor=1e-4, lr_critic=1e-3,
-                    lr_ddqn=1e-3, L=5)
+                    lr_ddqn=1e-3, L=5, independent_impl=impl)
 
 
-def _measure(cfg: T2DRLCfg, B: int, episodes: int, reps: int, seed: int = 0):
+def _measure(cfg: T2DRLCfg, B: int, episodes: int, reps: int, seed: int = 0,
+             train: bool = True):
     """(min_seconds, all_times, compile_seconds) for one compiled
     ``run_training`` call of ``episodes`` episodes at batch ``B``.  A fresh
     train state is built per repetition (run_training donates its input);
@@ -129,14 +159,14 @@ def _measure(cfg: T2DRLCfg, B: int, episodes: int, reps: int, seed: int = 0):
     ts = t2drl_init_batch(key, cfg, B)
     jax.block_until_ready(ts)
     t0 = time.perf_counter()
-    jax.block_until_ready(run_training(ts, cfg, key, idx))   # compile + run
-    first_call_s = time.perf_counter() - t0
+    jax.block_until_ready(run_training(ts, cfg, key, idx, train=train))
+    first_call_s = time.perf_counter() - t0                  # compile + run
     times = []
     for _ in range(reps):
         ts = t2drl_init_batch(key, cfg, B)
         jax.block_until_ready(ts)
         t0 = time.perf_counter()
-        _, stats = run_training(ts, cfg, key, idx)
+        _, stats = run_training(ts, cfg, key, idx, train=train)
         jax.block_until_ready(stats)
         times.append(time.perf_counter() - t0)
     return min(times), times, max(0.0, first_call_s - min(times))
@@ -149,7 +179,9 @@ def run_throughput(num_envs=(1, 8), episodes: int = 4, seed: int = 0,
     edge cells, one fully-jitted ``run_training`` call per repetition
     (compile excluded, min over ``reps``; the paper's U=M=T=K=10 setup)."""
     out = {"episodes": episodes, "reps": reps, "throughput": {},
-           "compile_s": {}, "spread_s": {}}
+           "compile_s": {}, "spread_s": {},
+           "host": {"cpu_count": os.cpu_count(),
+                    "device_count": jax.device_count()}}
     for policy in policies:
         cfg = _throughput_cfg(policy)
         for B in num_envs:
@@ -172,6 +204,27 @@ def run_throughput(num_envs=(1, 8), episodes: int = 4, seed: int = 0,
             if verbose:
                 print(f"{policy:12s} aggregate speedup B={b_hi} vs "
                       f"B={b_lo}: {hi / lo:.2f}x", flush=True)
+        if policy == "independent":
+            # the ISSUE-6 "before": the legacy per-learner vmap program at
+            # the largest B (B=1 bypasses to the same single-learner
+            # program in both impls, so only the batched point differs)
+            b_hi = max(num_envs)
+            vcfg = _throughput_cfg("independent", impl="vmap")
+            dt, times, compile_s = _measure(vcfg, b_hi, episodes, reps, seed)
+            thr = episodes * b_hi / dt
+            out["throughput"][f"independent_vmap_B{b_hi}"] = thr
+            out["compile_s"][f"independent_vmap_B{b_hi}"] = compile_s
+            out["spread_s"][f"independent_vmap_B{b_hi}"] = [
+                round(t, 3) for t in times]
+            fused = out["throughput"][f"independent_B{b_hi}"]
+            out["throughput"][f"independent_fused_vs_vmap_B{b_hi}"] = (
+                fused / thr)
+            if verbose:
+                print(f"{'indep vmap':12s} B={b_hi}: min {dt:6.2f}s for "
+                      f"{episodes} eps -> {thr:7.2f} ep*envs/s "
+                      f"(compile {compile_s:.1f}s)", flush=True)
+                print(f"{'independent':12s} fused vs vmap at B={b_hi}: "
+                      f"{fused / thr:.2f}x", flush=True)
     # always (re)write the baseline keys so a rerun with different episode
     # counts can't leave a stale speedup next to fresh throughput numbers;
     # the comparison is only valid under the baseline's exact protocol
@@ -192,28 +245,140 @@ def run_throughput(num_envs=(1, 8), episodes: int = 4, seed: int = 0,
     return out
 
 
+def run_breakdown(num_envs=(1, 8), episodes: int = 4, reps: int = 3,
+                  seed: int = 0, impls=("fused", "vmap"), verbose=True):
+    """Per-stage timing attribution for the independent training path.
+
+    Stages (per configuration, min over ``reps``):
+
+    - ``compile_s``   — first jitted call minus steady state, per program
+    - ``rollout_s``   — a full ``train=False`` episode batch: env stepping,
+      acting, and replay writes (the stores run unconditionally in the
+      episode scan; only learner updates are gated out), i.e. everything
+      EXCEPT the update chain
+    - ``train_s``     — the full ``train=True`` program
+    - ``update_s``    — train minus rollout: the learner-update chain the
+      fused batching rewrite attacks
+
+    Writes a ``breakdown`` section into runtime.json keyed
+    ``independent[_vmap]_B{n}``."""
+    out = {"breakdown": {"episodes": episodes, "reps": reps,
+                         "host": {"cpu_count": os.cpu_count(),
+                                  "device_count": jax.device_count()}}}
+    rows = out["breakdown"]
+    for impl in impls:
+        cfg = _throughput_cfg("independent", impl=impl)
+        tag = "independent" if impl == "fused" else "independent_vmap"
+        for B in num_envs:
+            if impl == "vmap" and B == min(num_envs) and len(num_envs) > 1:
+                continue   # B=1 bypasses to the same program in both impls
+            roll, _, c_roll = _measure(cfg, B, episodes, reps, seed,
+                                       train=False)
+            full, _, c_full = _measure(cfg, B, episodes, reps, seed,
+                                       train=True)
+            upd = max(0.0, full - roll)
+            rows[f"{tag}_B{B}"] = {
+                "compile_s": round(c_full, 2),
+                "compile_rollout_s": round(c_roll, 2),
+                "rollout_s": round(roll, 3),
+                "train_s": round(full, 3),
+                "update_s": round(upd, 3),
+                "update_frac": round(upd / full, 3) if full else None,
+            }
+            if verbose:
+                r = rows[f"{tag}_B{B}"]
+                print(f"{tag:18s} B={B}: compile {r['compile_s']:5.1f}s  "
+                      f"rollout {r['rollout_s']:6.2f}s  "
+                      f"train {r['train_s']:6.2f}s  "
+                      f"update {r['update_s']:6.2f}s "
+                      f"({100 * r['update_frac']:.0f}% of train)",
+                      flush=True)
+    _merge_runtime_json(out)
+    return out
+
+
 def run_smoke(floor: float = SMOKE_FLOOR, episodes: int = 2, reps: int = 2,
               verbose=True) -> dict:
-    """CI gate: shared-learner B=8 throughput must stay above ``floor``.
+    """CI gates, all on the same 2-episode compiled paths the full bench
+    measures:
 
-    Small enough for CI (one compile + ``reps`` timed calls), but the same
-    compiled path the full bench measures.  Writes the result into
-    runtime.json and raises SystemExit(1) below the floor."""
+    1. shared-learner B=8 throughput above ``floor`` (absolute);
+    2. independent fused B=8 at least ``FUSED_VS_VMAP_FLOOR``x the legacy
+       vmap program — the ISSUE-6 regression gate (vmap at B=8 used to run
+       ~0.6x of B=1's aggregate; the fused path must never fall back);
+    3. independent fused B=8 aggregate throughput at parity with B=1
+       (``B8_PARITY_FLOOR``) when the host has 2+ cores; on a 1-core box
+       the compute-bound update chain makes parity unattainable and the
+       relaxed ``B8_PARITY_FLOOR_1CORE`` applies;
+    4. when >1 XLA device is visible (CI forces 2 host devices), one tiny
+       ``run_training_sharded`` call so the shard_map placement path keeps
+       compiling.
+
+    Writes the results into runtime.json; raises SystemExit on any gate."""
+    failures = []
     cfg = _throughput_cfg("shared")
     dt, times, compile_s = _measure(cfg, 8, episodes, reps)
     thr = episodes * 8 / dt
-    out = {"smoke": {"shared_B8": thr, "compile_s": compile_s,
-                     "episodes": episodes, "floor": floor,
-                     "spread_s": [round(t, 3) for t in times]}}
-    _merge_runtime_json(out)
+    smoke = {"shared_B8": thr, "compile_s": compile_s,
+             "episodes": episodes, "floor": floor,
+             "spread_s": [round(t, 3) for t in times],
+             "host": {"cpu_count": os.cpu_count(),
+                      "device_count": jax.device_count()}}
     if verbose:
         print(f"smoke: shared B=8 {thr:.2f} ep*envs/s "
               f"(floor {floor}, compile {compile_s:.1f}s)", flush=True)
     if thr < floor:
-        raise SystemExit(
-            f"throughput smoke FAILED: shared B=8 {thr:.2f} ep*envs/s is "
-            f"below the pinned floor {floor}")
-    return out
+        failures.append(f"shared B=8 {thr:.2f} ep*envs/s below the pinned "
+                        f"floor {floor}")
+
+    # ISSUE-6 independent-mode gates: fused vs vmap at B=8, fused B8 vs B1.
+    fused = _throughput_cfg("independent")
+    b1, _, _ = _measure(fused, 1, episodes, reps)
+    b8, _, _ = _measure(fused, 8, episodes, reps)
+    v8, _, _ = _measure(_throughput_cfg("independent", impl="vmap"),
+                        8, episodes, reps)
+    thr_b1, thr_b8, thr_v8 = (episodes / b1, episodes * 8 / b8,
+                              episodes * 8 / v8)
+    vs_vmap, vs_b1 = thr_b8 / thr_v8, thr_b8 / thr_b1
+    parity_floor = (B8_PARITY_FLOOR if (os.cpu_count() or 1) >= 2
+                    else B8_PARITY_FLOOR_1CORE)
+    smoke.update(independent_B1=thr_b1, independent_B8=thr_b8,
+                 independent_vmap_B8=thr_v8,
+                 fused_vs_vmap_B8=vs_vmap, fused_B8_vs_B1=vs_b1,
+                 parity_floor=parity_floor)
+    if verbose:
+        print(f"smoke: independent B=1 {thr_b1:.2f}, fused B=8 "
+              f"{thr_b8:.2f}, vmap B=8 {thr_v8:.2f} ep*envs/s", flush=True)
+        print(f"smoke: fused-vs-vmap {vs_vmap:.2f}x "
+              f"(floor {FUSED_VS_VMAP_FLOOR}), B8-vs-B1 {vs_b1:.2f}x "
+              f"(floor {parity_floor})", flush=True)
+    if vs_vmap < FUSED_VS_VMAP_FLOOR:
+        failures.append(f"independent fused B=8 is {vs_vmap:.2f}x the vmap "
+                        f"path (floor {FUSED_VS_VMAP_FLOOR})")
+    if vs_b1 < parity_floor:
+        failures.append(f"independent fused B=8 aggregate is {vs_b1:.2f}x "
+                        f"B=1 (floor {parity_floor})")
+
+    # keep the shard_map placement path compiling (a small env keeps the
+    # extra compile cheap; correctness vs the fused path is pinned in
+    # tests/test_fused.py — this only guards "still builds and runs")
+    if jax.device_count() > 1:
+        scfg = dataclasses.replace(
+            _throughput_cfg("independent"), env=EnvCfg(U=6, M=6, T=6, K=6),
+            warmup=10)
+        key = jax.random.PRNGKey(0)
+        ts = t2drl_init_batch(key, scfg, jax.device_count())
+        _, stats = run_training_sharded(ts, scfg, key, jnp.arange(1))
+        jax.block_until_ready(stats)
+        smoke["sharded_devices"] = jax.device_count()
+        if verbose:
+            print(f"smoke: shard_map path ran on {jax.device_count()} "
+                  f"host devices", flush=True)
+
+    _merge_runtime_json({"smoke": smoke})
+    if failures:
+        raise SystemExit("throughput smoke FAILED: " + "; ".join(failures))
+    return {"smoke": smoke}
 
 
 def main():
@@ -229,12 +394,19 @@ def main():
     ap.add_argument("--skip-throughput", action="store_true",
                     help="skip the vector-env training throughput section")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI mode: shared B=8 throughput floor gate only")
+                    help="CI mode: throughput floor + independent-mode "
+                         "fused gates only")
     ap.add_argument("--floor", type=float, default=SMOKE_FLOOR,
                     help="episodes*envs/sec floor for --smoke")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="per-stage timing attribution (compile / rollout+"
+                         "replay-write / update) for the independent path")
     args = ap.parse_args()
     if args.smoke:
         run_smoke(floor=args.floor)
+        return
+    if args.breakdown:
+        run_breakdown(tuple(args.num_envs), episodes=args.episodes)
         return
     if not args.skip_slot:
         run(tuple(args.users))

@@ -15,11 +15,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: convergence,users,cache,runtime,"
-                         "roofline,scenarios,fleet")
+                         "roofline,scenarios,fleet,population")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-scale smoke: runtime runs the shared-B8 "
-                         "throughput floor gate instead of the full "
-                         "sweep")
+                    help="CI-scale smoke: runtime runs the throughput "
+                         "floor + independent fused gates, population "
+                         "runs the one-compile 16-member sweep")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     episodes = 500 if args.full else 60
@@ -31,7 +31,7 @@ def main() -> None:
     if want("runtime"):
         from . import bench_runtime
         if args.smoke:
-            print("== runtime smoke: shared-B8 throughput floor ==",
+            print("== runtime smoke: throughput floor + fused gates ==",
                   flush=True)
             bench_runtime.run_smoke()
         else:
@@ -39,6 +39,16 @@ def main() -> None:
             bench_runtime.run(users=(10, 12, 14, 16, 18))
             print("\n== vector-env training throughput ==", flush=True)
             bench_runtime.run_throughput((1, 8), episodes=4)
+    if want("population"):
+        from . import bench_population
+        if args.smoke:
+            print("\n== population smoke: 16-member sweep, one compile ==",
+                  flush=True)
+            bench_population.run_smoke()
+        else:
+            print("\n== population sweep: fused hyperparameter grid ==",
+                  flush=True)
+            bench_population.run(episodes=episodes if args.full else 40)
     if want("roofline"):
         print("\n== §Roofline: dry-run table ==", flush=True)
         from . import bench_roofline

@@ -14,8 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.baselines import GACfg, ga_allocate, rcars_allocate
-from repro.core.d3pg import (D3PGCfg, actor_act, amend_actions, d3pg_init,
-                             d3pg_update, make_actor_schedule)
+from repro.core.d3pg import (D3PGCfg, actor_act, actor_act_stacked,
+                             amend_actions, d3pg_init, d3pg_update,
+                             d3pg_update_stacked, make_actor_schedule)
 from repro.core.env import EnvCfg
 
 from .base import Agent, no_update
@@ -54,12 +55,34 @@ def d3pg_allocator(d3: D3PGCfg, sched=None) -> Agent:
         raw = actor_act(policy["actor"], d3, sched, obs.s, key)
         return amend_actions(raw, obs.env.req, obs.env.rho, U, mask=obs.mask)
 
+    # -- fused B-learner closures (DESIGN.md §13): same math / PRNG streams
+    # as jax.vmap of act/update above, executed as batched contractions.
+
+    def act_stacked(state, obs, keys, step):
+        # keys: (B, 2, 2) — per-cell (chain, noise) pairs
+        raw = actor_act_stacked(state["actor"], d3, sched, obs.s, keys[:, 0])
+        noise = jax.vmap(
+            lambda k, r: jax.random.normal(k, r.shape))(keys[:, 1], raw)
+        sigma = jnp.asarray(step["sigma"], jnp.float32)
+        if sigma.ndim:                       # per-learner (B,) population lever
+            sigma = sigma.reshape(sigma.shape + (1,) * (raw.ndim - 1))
+        raw = jnp.clip(raw + sigma * noise, 0.0, 1.0)
+        return amend_actions(raw, obs.env.req, obs.env.rho, U, mask=obs.mask)
+
+    def update_stacked(state, batch, keys):
+        data = {k: v for k, v in batch.items() if k not in _UPDATE_AUX}
+        return d3pg_update_stacked(state, d3, sched, data, keys,
+                                   mask=batch.get("mask"),
+                                   lr_a=batch.get("lr_actor"),
+                                   lr_c=batch.get("lr_critic"))
+
     return Agent(name="d3pg" if d3.actor_kind == "diffusion" else "ddpg",
                  learns=True,
                  init=lambda key: d3pg_init(key, d3),
                  act=act, update=update,
                  export=lambda state: {"actor": state["actor"]},
-                 greedy=greedy)
+                 greedy=greedy,
+                 act_stacked=act_stacked, update_stacked=update_stacked)
 
 
 def schrs_allocator(env_cfg: EnvCfg, ga: GACfg) -> Agent:

@@ -91,6 +91,17 @@ class Agent(NamedTuple):
     batch_act : callable, optional
         Lockstep vector-env action sampler (``None`` = ``act`` is
         batch-transparent; see module docstring).
+    act_stacked : callable, optional
+        Fused B-learner ``act`` (DESIGN.md §13): same signature as the
+        vmapped ``act`` of :func:`vmap_agent` — stacked state (leading
+        ``(B,)`` on every leaf), per-cell obs/keys — but implemented as
+        single batched contractions instead of B per-learner programs.
+        ``step`` values may additionally be per-learner ``(B,)`` arrays
+        (the population lever).  Must be bit-identical to the vmapped
+        ``act`` on the same inputs.  ``None`` = no fused path; the vmap
+        fallback is used.
+    update_stacked : callable, optional
+        Fused B-learner ``update``; same contract as ``act_stacked``.
     """
     name: str
     learns: bool
@@ -100,6 +111,8 @@ class Agent(NamedTuple):
     export: Callable
     greedy: Callable
     batch_act: Optional[Callable] = None
+    act_stacked: Optional[Callable] = None
+    update_stacked: Optional[Callable] = None
 
 
 def no_update(state, batch, key):
@@ -107,7 +120,7 @@ def no_update(state, batch, key):
     return state, {}
 
 
-def vmap_agent(agent: Agent) -> Agent:
+def vmap_agent(agent: Agent, impl: str = "fused") -> Agent:
     """Lift an agent to B independent learners as one stacked pytree.
 
     The returned agent's ``init`` takes ``(B, 2)`` stacked PRNG keys and
@@ -116,10 +129,32 @@ def vmap_agent(agent: Agent) -> Agent:
     minibatches with per-cell keys.  This is the single generic batching
     wrapper that replaces the former ``d3pg_*_batch`` / ``ddqn_*_batch``
     duplicates (DESIGN.md §12).
+
+    ``impl`` selects how the stacked learners execute (DESIGN.md §13):
+
+    - ``"fused"`` (default): use the agent's hand-fused ``act_stacked`` /
+      ``update_stacked`` closures where provided — all B learners advance
+      through single batched contractions and one fused optimizer pass —
+      falling back to ``jax.vmap`` per closure where not.  Per-``step``
+      schedule values may be per-learner ``(B,)`` arrays (population
+      training).
+    - ``"vmap"``: plain ``jax.vmap`` of every closure — the bit-identity
+      reference the fused path is pinned against (``tests/test_fused.py``).
     """
+    if impl not in ("fused", "vmap"):
+        raise ValueError(f"vmap_agent: unknown impl {impl!r}; "
+                         f"expected 'fused' or 'vmap'")
+    fused = impl == "fused"
+    act = agent.act_stacked if fused and agent.act_stacked is not None \
+        else jax.vmap(agent.act, in_axes=(0, 0, 0, None))
+    update = agent.update_stacked \
+        if fused and agent.update_stacked is not None \
+        else jax.vmap(agent.update, in_axes=(0, 0, 0))
     return agent._replace(
         init=jax.vmap(agent.init),
-        act=jax.vmap(agent.act, in_axes=(0, 0, 0, None)),
-        update=jax.vmap(agent.update, in_axes=(0, 0, 0)),
+        act=act,
+        update=update,
         batch_act=None,
+        act_stacked=None,
+        update_stacked=None,
     )

@@ -11,8 +11,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.baselines import random_cache, static_popular_cache
-from repro.core.ddqn import DDQNCfg, amend_caching, ddqn_act, ddqn_init, \
-    ddqn_update
+from repro.core.ddqn import (DDQNCfg, amend_caching, ddqn_act,
+                             ddqn_act_stacked, ddqn_init, ddqn_update,
+                             ddqn_update_stacked)
 from repro.core.env import EnvCfg
 
 from .base import Agent, no_update
@@ -46,11 +47,27 @@ def ddqn_cacher(dq: DDQNCfg, env_cfg: EnvCfg) -> Agent:
         a_int = ddqn_act(policy["ddqn"], dq, obs.gamma_idx, key, 0.0)
         return amend_caching(a_int, dq, obs.models.c, env_cfg.C)
 
+    # -- fused B-learner closures (DESIGN.md §13): the Q-net forward of all
+    # B cells runs as one batched contraction; the amender stays vmapped
+    # (per-cell model zoos, and the feasible amender is single-env only).
+
+    def act_stacked(state, obs, keys, step):
+        a_int = ddqn_act_stacked(state, dq, obs.gamma_idx, keys, step["eps"])
+        rho = jax.vmap(lambda a, c: amend_caching(a, dq, c, env_cfg.C))(
+            a_int, obs.models.c)
+        return a_int, rho
+
+    def update_stacked(state, batch, keys):
+        data = {k: v for k, v in batch.items() if k != "lr"}
+        new, loss = ddqn_update_stacked(state, dq, data, lr=batch.get("lr"))
+        return new, {"loss": loss}
+
     return Agent(name="ddqn", learns=True,
                  init=lambda key: ddqn_init(key, dq),
                  act=act, update=update,
                  export=lambda state: {"ddqn": {"q": state["q"]}},
-                 greedy=greedy, batch_act=batch_act)
+                 greedy=greedy, batch_act=batch_act,
+                 act_stacked=act_stacked, update_stacked=update_stacked)
 
 
 def static_cacher(env_cfg: EnvCfg) -> Agent:

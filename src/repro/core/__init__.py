@@ -21,8 +21,10 @@ from .baselines import (GACfg, ga_allocate, random_cache,  # noqa: F401
 from .t2drl import (T2DRLCfg, episode_epsilon, episode_lr_scale,  # noqa: F401
                     episode_sigma, eval_t2drl, export_policy,
                     greedy_frame_cache, greedy_slot_action, run_episode,
-                    run_eval, run_training, t2drl_init, t2drl_init_batch,
-                    train_t2drl)
+                    run_eval, run_training, run_training_sharded,
+                    t2drl_init, t2drl_init_batch, train_t2drl)
+from .population import (PopMember, default_grid, population_schedules,  # noqa: F401
+                         rank_population, train_population)
 # Legacy per-method batch helpers now live behind the agent protocol as thin
 # shims over repro.agents.vmap_agent.  Re-exported lazily (PEP 562): a module
 # -level import would cycle when repro.agents is imported before repro.core.

@@ -92,3 +92,36 @@ def buffer_sample_batch(buf, keys, batch: int):
     """Sample a (B, batch, ...) minibatch — one independent draw per env.
     keys: (B, 2) PRNG keys."""
     return jax.vmap(buffer_sample, in_axes=(0, 0, None))(buf, keys, batch)
+
+
+# -- fused (DESIGN.md §13) ----------------------------------------------------
+#
+# Same layout as the *_batch helpers, but the gathers/scatters of all B
+# cells execute as ONE indexed op per leaf instead of B vmapped ops.  The
+# per-cell randint draws stay vmapped so the index streams (and thus the
+# sampled minibatches) are bit-identical to buffer_sample_batch — pinned
+# by tests/test_fused.py.
+
+def buffer_sample_stacked(buf, keys, batch: int):
+    """Fused ``buffer_sample_batch``: one (B, batch) gather per leaf."""
+    idx = jax.vmap(
+        lambda k, s: jax.random.randint(k, (batch,), 0, jnp.maximum(s, 1))
+    )(keys, buf["size"])                                        # (B, batch)
+    b_ix = jnp.arange(idx.shape[0])[:, None]
+    return jax.tree.map(lambda d: d[b_ix, idx], buf["data"])
+
+
+def buffer_add_many_stacked(buf, items):
+    """Fused ``buffer_add_many_batch``: items' leaves are (B, n, ...);
+    all B cyclic writes land in one scatter per leaf."""
+    n = jax.tree.leaves(items)[0].shape[1]
+    cap = _capacity({"data": jax.tree.map(lambda d: d[0], buf["data"])})
+    if n > cap:
+        raise ValueError(f"buffer_add_many_stacked: cannot write {n} items "
+                         f"into buffers of capacity {cap}")
+    idx = (buf["ptr"][:, None] + jnp.arange(n)[None, :]) % cap  # (B, n)
+    b_ix = jnp.arange(idx.shape[0])[:, None]
+    data = jax.tree.map(lambda d, x: d.at[b_ix, idx].set(x),
+                        buf["data"], items)
+    return {"data": data, "ptr": (buf["ptr"] + n) % cap,
+            "size": jnp.minimum(buf["size"] + n, cap)}

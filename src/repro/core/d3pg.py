@@ -14,9 +14,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.diffusion import (denoiser_init, make_schedule,
-                             reverse_sample_actions)
-from repro.optim import adam_init, adam_update
-from .networks import mlp_apply, mlp_init, soft_update
+                             reverse_sample_actions,
+                             reverse_sample_actions_stacked)
+from repro.optim import adam_init, adam_update, adam_update_stacked
+from .networks import (mlp_apply, mlp_apply_stacked, mlp_init, soft_update)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,3 +167,92 @@ def d3pg_update(params, cfg: D3PGCfg, sched, batch, key, *,
 # Batched (per-env leading axis) init/update live behind the agent protocol:
 # repro.agents.vmap_agent generically lifts any Agent to B stacked learners
 # (d3pg_init_batch / d3pg_update_batch remain as shims in repro.agents).
+
+
+# -- fused B-learner path (DESIGN.md §13) -------------------------------------
+#
+# Same math and same PRNG streams as jax.vmap of the per-learner functions
+# above, but the matmuls of all B learners execute as single batched
+# contractions and the B Adam steps as one fused pass.  Per-learner random
+# draws stay vmapped (elementwise threefry fuses fine); grad-of-sum over
+# per-learner losses equals vmap-of-grad because the stacked parameter
+# blocks are independent.  Bit-identity is pinned by tests/test_fused.py.
+
+
+def actor_act_stacked(actor_params, cfg: D3PGCfg, sched, state, keys):
+    """Fused ``actor_act`` over B stacked learners.  state: (B, ..., S);
+    keys: (B, 2) — one action key per learner (ignored by the mlp kind,
+    exactly like the per-learner path)."""
+    if cfg.actor_kind == "diffusion":
+        return reverse_sample_actions_stacked(actor_params, sched, state,
+                                              keys, cfg.action_dim)
+    x = mlp_apply_stacked(actor_params, state, final_act=jnp.tanh)
+    return 0.5 * (x + 1.0)
+
+
+def critic_q_stacked(critic_params, state, action):
+    return mlp_apply_stacked(
+        critic_params, jnp.concatenate([state, action], axis=-1))[..., 0]
+
+
+def d3pg_update_stacked(params, cfg: D3PGCfg, sched, batch, keys, *,
+                        lr_a=None, lr_c=None, mask=None):
+    """Fused ``d3pg_update`` over B stacked learners.
+
+    params: stacked (leading ``(B,)`` on every leaf); batch leaves:
+    ``(B, n, ...)`` — each learner's own minibatch; keys: ``(B, 2)``;
+    ``lr_a``/``lr_c``: python scalars or per-learner ``(B,)`` arrays (the
+    population lever); ``mask``: optional ``(B, U)`` per-cell active-user
+    mask.  Returns ``(new_params, {"critic_loss": (B,), "actor_loss":
+    (B,)})`` exactly like ``jax.vmap(d3pg_update)``."""
+    lr_a = cfg.lr_actor if lr_a is None else lr_a
+    lr_c = cfg.lr_critic if lr_c is None else lr_c
+    kk = jax.vmap(jax.random.split)(keys)               # (B, 2, 2)
+    k_t, k_pi = kk[:, 0], kk[:, 1]
+    U = cfg.action_dim // 2
+    # amend_actions is batch-safe: with row-batched inputs the take_along_axis
+    # gate and last-axis reductions reproduce the per-row vmap exactly; the
+    # per-cell mask broadcasts over the minibatch axis.
+    m = None if mask is None else mask[:, None, :]
+    amend = lambda raw, req, rho: amend_actions(raw, req, rho, U, mask=m)
+
+    # --- critic (24) ---------------------------------------------------------
+    raw1 = actor_act_stacked(params["actor_t"], cfg, sched, batch["s1"], k_t)
+    b1, xi1 = amend(raw1, batch["req1"], batch["rho1"])
+    a1 = jnp.concatenate([b1, xi1], axis=-1)
+    y_hat = batch["r"] + cfg.omega * critic_q_stacked(params["critic_t"],
+                                                      batch["s1"], a1)
+    y_hat = jax.lax.stop_gradient(y_hat)
+
+    def critic_loss(c):
+        y = critic_q_stacked(c, batch["s"], batch["a"])
+        per = jnp.mean(0.5 * (y_hat - y) ** 2, axis=-1)          # (B,)
+        return jnp.sum(per), per
+
+    (_, c_loss), c_grads = jax.value_and_grad(
+        critic_loss, has_aux=True)(params["critic"])
+    critic_new, opt_c_new, _ = adam_update_stacked(
+        c_grads, params["opt_c"], params["critic"], lr=lr_c)
+
+    # --- actor (26)-(27): maximise Q(s, amend(pi(s))) ------------------------
+    def actor_loss(a_params):
+        raw = actor_act_stacked(a_params, cfg, sched, batch["s"], k_pi)
+        b, xi = amend(raw, batch["req"], batch["rho"])
+        act = jnp.concatenate([b, xi], axis=-1)
+        per = -jnp.mean(critic_q_stacked(critic_new, batch["s"], act),
+                        axis=-1)                                  # (B,)
+        return jnp.sum(per), per
+
+    (_, a_loss), a_grads = jax.value_and_grad(
+        actor_loss, has_aux=True)(params["actor"])
+    actor_new, opt_a_new, _ = adam_update_stacked(
+        a_grads, params["opt_a"], params["actor"], lr=lr_a)
+
+    new = {"actor": actor_new,
+           "actor_t": soft_update(params["actor_t"], actor_new,
+                                  cfg.eps_target),
+           "critic": critic_new,
+           "critic_t": soft_update(params["critic_t"], critic_new,
+                                   cfg.eps_target),
+           "opt_a": opt_a_new, "opt_c": opt_c_new}
+    return new, {"critic_loss": c_loss, "actor_loss": a_loss}

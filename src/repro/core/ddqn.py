@@ -13,8 +13,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.optim import adam_init, adam_update
-from .networks import mlp_apply, mlp_init, soft_update
+from repro.optim import adam_init, adam_update, adam_update_stacked
+from .networks import (mlp_apply, mlp_apply_stacked, mlp_init, soft_update)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,3 +100,52 @@ def ddqn_update(params, cfg: DDQNCfg, batch, *, lr=None):
 # Batched (per-env leading axis) init/update live behind the agent protocol:
 # repro.agents.vmap_agent generically lifts any Agent to B stacked learners
 # (ddqn_init_batch / ddqn_update_batch remain as shims in repro.agents).
+
+
+# -- fused B-learner path (DESIGN.md §13) -------------------------------------
+
+
+def ddqn_act_stacked(params, cfg: DDQNCfg, gamma_idx, keys, eps):
+    """Fused epsilon-greedy for B stacked learners.  gamma_idx: (B,) —
+    each learner's own popularity state; keys: (B, 2); eps: python
+    scalar or per-learner (B,) array.  The per-learner key splits and
+    randint/uniform draws stay vmapped, so the action stream is
+    bit-identical to ``jax.vmap(ddqn_act)`` (tests/test_fused.py)."""
+    qv = mlp_apply_stacked(params["q"], _obs(gamma_idx, cfg))
+    greedy = jnp.argmax(qv, axis=-1)                         # (B,)
+    kk = jax.vmap(jax.random.split)(keys)                    # (B, 2, 2)
+    rand = jax.vmap(
+        lambda k: jax.random.randint(k, (), 0, cfg.n_actions))(kk[:, 0])
+    explore = jax.vmap(lambda k: jax.random.uniform(k, ()))(kk[:, 1]) < eps
+    return jnp.where(explore, rand, greedy).astype(jnp.int32)
+
+
+def ddqn_update_stacked(params, cfg: DDQNCfg, batch, *, lr=None):
+    """Fused ``ddqn_update`` over B stacked learners.  batch leaves carry
+    a leading ``(B,)`` axis (each learner's own minibatch); ``lr`` is a
+    python scalar or per-learner ``(B,)`` array.  Returns
+    ``(params, loss)`` with per-learner losses ``(B,)`` exactly like
+    ``jax.vmap(ddqn_update)``."""
+    lr = cfg.lr if lr is None else lr
+    s = _obs(batch["s"], cfg)
+    s1 = _obs(batch["s1"], cfg)
+
+    def loss_fn(q):
+        qv = mlp_apply_stacked(q, s)                  # (B, n, 2^M)
+        y = jnp.take_along_axis(qv, batch["a"][..., None], axis=-1)[..., 0]
+        # action selection by the online net, evaluation by the target (33a)
+        a1 = jnp.argmax(mlp_apply_stacked(q, s1), axis=-1)
+        q1 = mlp_apply_stacked(params["q_target"], s1)
+        y_hat = batch["r"] + cfg.rho * jnp.take_along_axis(
+            q1, a1[..., None], axis=-1)[..., 0]
+        per = jnp.mean(0.5 * (jax.lax.stop_gradient(y_hat) - y) ** 2,
+                       axis=-1)                       # (B,)
+        return jnp.sum(per), per
+
+    (_, loss), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params["q"])
+    q_new, opt_new, _ = adam_update_stacked(grads, params["opt"],
+                                            params["q"], lr=lr)
+    return {"q": q_new,
+            "q_target": soft_update(params["q_target"], q_new, cfg.kappa),
+            "opt": opt_new}, loss

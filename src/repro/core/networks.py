@@ -1,4 +1,12 @@
-"""Plain MLP utilities for critic / Q networks (paper Sec. 7.1 topology)."""
+"""Plain MLP utilities for critic / Q networks (paper Sec. 7.1 topology).
+
+Two apply paths (DESIGN.md §13): the per-learner ``mlp_apply`` and the
+fused ``mlp_apply_stacked`` over B stacked parameter sets — every leaf
+carries a leading ``(B,)`` learner axis and the whole stack advances
+through one batched ``(B, ..., in) × (B, in, out)`` contraction per layer
+instead of B small per-learner matmuls.  Both paths are bit-identical to
+``jax.vmap`` of the per-learner apply (pinned by ``tests/test_fused.py``).
+"""
 from __future__ import annotations
 
 import math
@@ -18,6 +26,36 @@ def mlp_apply(layers, x, *, final_act=None):
     for layer in layers[:-1]:
         x = jax.nn.relu(x @ layer["w"] + layer["b"])
     x = x @ layers[-1]["w"] + layers[-1]["b"]
+    if final_act is not None:
+        x = final_act(x)
+    return x
+
+
+def mlp_init_stacked(keys, dims):
+    """B independent MLPs as one stacked pytree: leaves ``(B, in, out)`` /
+    ``(B, out)``.  ``keys``: (B, 2) per-learner init keys.  Init is not a
+    hot path — the stack is built by vmapping the per-learner init, which
+    fixes the canonical stacked layout every fused path assumes."""
+    return jax.vmap(lambda k: mlp_init(k, dims))(keys)
+
+
+def stacked_linear(x, w, b):
+    """``x @ w + b`` with a leading learner axis on the parameters.
+
+    x: ``(B, ..., i)``; w: ``(B, i, o)``; b: ``(B, o)`` -> ``(B, ..., o)``.
+    One batched contraction for all B learners — the einsum lowers to the
+    same batch-dim ``dot_general`` ``jax.vmap`` of ``x @ w`` produces, so
+    the fused path stays bit-identical to the vmap reference."""
+    y = jnp.einsum("b...i,bio->b...o", x, w)
+    return y + b.reshape((b.shape[0],) + (1,) * (y.ndim - 2) + (b.shape[-1],))
+
+
+def mlp_apply_stacked(layers, x, *, final_act=None):
+    """``mlp_apply`` over B stacked parameter sets (leading ``(B,)`` on
+    every leaf); x: ``(B, ..., in)`` -> ``(B, ..., out)``."""
+    for layer in layers[:-1]:
+        x = jax.nn.relu(stacked_linear(x, layer["w"], layer["b"]))
+    x = stacked_linear(x, layers[-1]["w"], layers[-1]["b"])
     if final_act is not None:
         x = final_act(x)
     return x

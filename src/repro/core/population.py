@@ -1,0 +1,204 @@
+"""Population-based hyperparameter sweeps over the fused independent core.
+
+A *population* is B independent learners trained in ONE compiled
+``run_training`` call (DESIGN.md §13) where each member carries its own
+hyperparameters — epsilon/sigma exploration schedules, actor/critic/DDQN
+learning rates, and the beyond-paper ``shape_hit`` reward-shaping
+coefficient — delivered as per-member ``(E, B)`` schedule arrays through the
+``pop`` argument of :func:`repro.core.t2drl.run_training`.
+
+Knobs that are jit-STATIC (they change the compiled program — today only
+``updates_per_slot``) cannot vary inside one call; :func:`train_population`
+groups members by their static fields and runs one compile per group, so a
+sweep mixing ``updates_per_slot`` values costs one compile per distinct
+value, not per member.
+
+The sweep protocol (``benchmarks/bench_population.py``,
+``scripts/sweep_population.py``): train every member, greedily evaluate each
+(``run_eval``: eps = sigma = 0, no updates), rank by mean evaluation
+utility, and report the best member against the training-free RCARS
+baseline on the same environment draw.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .t2drl import (T2DRLCfg, episode_epsilon, episode_lr_scale,
+                    episode_sigma, run_eval, run_training, t2drl_init_batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class PopMember:
+    """One population member: hyperparameter overrides on a base T2DRLCfg.
+
+    ``None`` means "inherit the base config's value".  All fields except
+    ``updates_per_slot`` are dynamic (per-member schedule arrays — members
+    differing only in them share ONE compile); ``updates_per_slot`` is
+    jit-static and defines the member's compile group.
+
+    ``name`` is a free-form label for leaderboards; auto-derived from the
+    overridden fields when empty.
+    """
+    eps_start: Optional[float] = None
+    eps_end: Optional[float] = None
+    eps_decay_episodes: Optional[int] = None
+    eps_schedule: Optional[str] = None
+    lr_actor: Optional[float] = None
+    lr_critic: Optional[float] = None
+    lr_ddqn: Optional[float] = None
+    lr_schedule: Optional[str] = None
+    lr_warmdown_episodes: Optional[int] = None
+    shape_hit: float = 0.0
+    updates_per_slot: Optional[int] = None
+    name: str = ""
+
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        parts = [f"{f.name}={getattr(self, f.name)}"
+                 for f in dataclasses.fields(self)
+                 if f.name not in ("name", "shape_hit")
+                 and getattr(self, f.name) is not None]
+        if self.shape_hit:
+            parts.append(f"shape_hit={self.shape_hit}")
+        return ",".join(parts) if parts else "base"
+
+    def member_cfg(self, cfg: T2DRLCfg) -> T2DRLCfg:
+        """The base config with this member's *schedule-shaping* overrides
+        applied — used only to materialize per-episode arrays; the static
+        program stays the group's."""
+        overrides = {f.name: getattr(self, f.name)
+                     for f in dataclasses.fields(self)
+                     if f.name not in ("name", "shape_hit")
+                     and getattr(self, f.name) is not None}
+        return dataclasses.replace(cfg, **overrides)
+
+
+def population_schedules(cfg: T2DRLCfg, members: Sequence[PopMember],
+                         episodes: int):
+    """Materialize per-member hyperparameter schedules as a ``pop`` dict.
+
+    Returns ``{key: (E, B)}`` arrays over ``E = episodes`` and
+    ``B = len(members)`` — each column is that member's own
+    epsilon/sigma/LR schedule, computed by the SAME schedule functions the
+    driver uses for scalar configs (``episode_epsilon`` etc.), so a
+    single-member population reproduces the plain ``run_training``
+    schedules exactly."""
+    e = jnp.arange(episodes, dtype=jnp.float32)
+    cols = {k: [] for k in ("eps", "sigma", "lr_actor", "lr_critic",
+                            "lr_ddqn", "shape_hit")}
+    for m in members:
+        mc = m.member_cfg(cfg)
+        scale = episode_lr_scale(mc, e)
+        cols["eps"].append(episode_epsilon(mc, e))
+        cols["sigma"].append(episode_sigma(mc, e))
+        cols["lr_actor"].append(mc.lr_actor * scale)
+        cols["lr_critic"].append(mc.lr_critic * scale)
+        cols["lr_ddqn"].append(jnp.full((episodes,), mc.lr_ddqn,
+                                        jnp.float32))
+        cols["shape_hit"].append(jnp.full((episodes,), m.shape_hit,
+                                          jnp.float32))
+    return {k: jnp.stack(v, axis=1) for k, v in cols.items()}   # (E, B)
+
+
+def _group_members(cfg: T2DRLCfg, members: Sequence[PopMember]):
+    """Split members into compile groups by their jit-static fields.
+    Yields ``(group_cfg, [(index, member), ...])`` preserving input order
+    within each group."""
+    def static_key(m: PopMember):
+        return (m.updates_per_slot if m.updates_per_slot is not None
+                else cfg.updates_per_slot,)
+
+    order = sorted(enumerate(members), key=lambda im: static_key(im[1]))
+    for key, grp in itertools.groupby(order, key=lambda im: static_key(im[1])):
+        group_cfg = dataclasses.replace(cfg, updates_per_slot=key[0])
+        yield group_cfg, list(grp)
+
+
+def train_population(cfg: T2DRLCfg, members: Sequence[PopMember], *,
+                     episodes: int, eval_episodes: int = 4,
+                     seed: int = 0, share_models: bool = True,
+                     log=None):
+    """Train and evaluate a population; one compiled call per static group.
+
+    Every member trains for ``episodes`` episodes in fused independent mode
+    (``cfg`` must have ``policy="independent"``; ``independent_impl`` is
+    forced to ``"fused"``), then is greedily evaluated for
+    ``eval_episodes`` episodes.  ``share_models=True`` broadcasts one model
+    zoo to every member so the sweep compares hyperparameters, not
+    environment draws (per-member env/episode PRNG streams still differ —
+    average over eval episodes to compare members).
+
+    Returns a list of result dicts (input order), each with the member's
+    ``label``, training ``history`` (per-episode scalars), and mean eval
+    stats; plus a ``groups`` summary of compiles.
+    """
+    cfg = dataclasses.replace(cfg, policy="independent",
+                              independent_impl="fused")
+    results = [None] * len(members)
+    groups = []
+    for group_cfg, grp in _group_members(cfg, members):
+        idxs = [i for i, _ in grp]
+        ms = [m for _, m in grp]
+        B = len(ms)
+        key = jax.random.PRNGKey(seed)
+        k_init, k_train = jax.random.split(key)
+        ts = t2drl_init_batch(k_init, group_cfg, B,
+                              share_models=share_models)
+        pop = population_schedules(group_cfg, ms, episodes)
+        if log:
+            log(f"group updates_per_slot={group_cfg.updates_per_slot}: "
+                f"{B} members x {episodes} episodes, one compile")
+        ts, hist = run_training(ts, group_cfg, k_train,
+                                jnp.arange(episodes), pop=pop)
+        ev = run_eval(ts, group_cfg, jax.random.fold_in(key, 10_000),
+                      jnp.arange(eval_episodes))
+        ev_mean = {k: jnp.mean(v, axis=0) for k, v in ev.items()}  # (B,)
+        for j, (i, m) in enumerate(zip(idxs, ms)):
+            results[i] = {
+                "label": m.label(),
+                "member": m,
+                "history": {k: v[:, j] for k, v in hist.items()},
+                "eval": {k: float(ev_mean[k][j]) for k in ev_mean},
+            }
+        groups.append({"updates_per_slot": group_cfg.updates_per_slot,
+                       "members": [m.label() for m in ms]})
+    return results, groups
+
+
+def rank_population(results, *, by: str = "utility", descending=None):
+    """Order member results best-first by a mean-eval stat.  Stats where
+    lower is better (``delay``, ``deadline_viol``, ``storage_viol``) sort
+    ascending unless overridden."""
+    if descending is None:
+        descending = by not in ("delay", "deadline_viol", "storage_viol")
+    return sorted(results, key=lambda r: r["eval"][by], reverse=descending)
+
+
+def default_grid(*, updates_per_slot: Sequence[int] = (1,)) -> list:
+    """The stock 16-member sweep grid (ISSUE 6): eps schedule x actor/critic
+    LR x DDQN LR x reward shaping, optionally crossed with static
+    ``updates_per_slot`` groups.  With the default single group the whole
+    grid trains in ONE compiled call."""
+    grid = []
+    for ups in updates_per_slot:
+        for eps_start, eps_sched in ((1.0, "linear"), (0.6, "cosine")):
+            for lr_a, lr_c in ((1e-4, 1e-3), (3e-4, 3e-3)):
+                for lr_q in (1e-3, 3e-3):
+                    for shape in (0.0, 0.5):
+                        grid.append(PopMember(
+                            eps_start=eps_start, eps_schedule=eps_sched,
+                            lr_actor=lr_a, lr_critic=lr_c, lr_ddqn=lr_q,
+                            shape_hit=shape,
+                            updates_per_slot=(ups if len(updates_per_slot)
+                                              > 1 else None),
+                            name=(f"eps{eps_start}-{eps_sched}_a{lr_a}"
+                                  f"_c{lr_c}_q{lr_q}_s{shape}"
+                                  + (f"_u{ups}" if len(updates_per_slot) > 1
+                                     else ""))))
+    return grid

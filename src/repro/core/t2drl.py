@@ -40,11 +40,12 @@ import jax.numpy as jnp
 # only repro.agents.base (which has no repro.core dependency) is safe to
 # import at module level; the factory dispatch is imported lazily inside
 # _agents so either package may be imported first without a cycle
-from repro.agents.base import FrameObs, SlotObs
+from repro.agents.base import FrameObs, SlotObs, vmap_agent
 from .baselines import GACfg
 from .buffers import (buffer_add, buffer_add_batch, buffer_add_many,
-                      buffer_add_many_batch, buffer_init, buffer_sample,
-                      buffer_sample_batch)
+                      buffer_add_many_batch, buffer_add_many_stacked,
+                      buffer_init, buffer_sample, buffer_sample_batch,
+                      buffer_sample_stacked)
 from .d3pg import D3PGCfg, d3pg_init
 from .ddqn import DDQNCfg, ddqn_init
 from .env import (EnvCfg, EnvState, ModelParams, ScenarioSchedule,
@@ -68,6 +69,15 @@ class T2DRLCfg:
     policy : {"independent", "shared"}
         Vector-env mode (DESIGN.md §6): B independent learners vs one
         learner fed by all cells.
+    independent_impl : {"fused", "vmap"}
+        How B > 1 independent learners execute (DESIGN.md §13).
+        ``"fused"`` (default) runs all B learners as ONE batched program —
+        stacked einsum contractions, a fused optimizer pass, scalar
+        (branch-skipping) update gates — and is what population training
+        requires.  ``"vmap"`` is the legacy ``jax.vmap`` of the single-env
+        episode, kept as the bit-identity reference the fused path is
+        pinned against (``tests/test_fused.py``).  B == 1 always runs the
+        unbatched legacy program.
     episodes : int
         Default training episode count (paper: 500).
     warmup : int
@@ -108,6 +118,7 @@ class T2DRLCfg:
     allocator: str = "d3pg"     # d3pg | ddpg | schrs | rcars
     cacher: str = "ddqn"        # ddqn | static | random
     policy: str = "independent"  # vector-env mode: independent | shared
+    independent_impl: str = "fused"  # B>1 independent learners: fused | vmap
     episodes: int = 500
     warmup: int = 200           # slot transitions before D3PG updates
     eps_start: float = 1.0      # DDQN epsilon-greedy schedule (per episode)
@@ -298,6 +309,31 @@ def _slot_updates(alloc, cfg: T2DRLCfg, state, ks, step, aux_mask, sample):
     state, _ = jax.lax.scan(
         one, state, (jax.random.split(ks[2], cfg.updates_per_slot),
                      jax.random.split(ks[3], cfg.updates_per_slot)))
+    return state
+
+
+def _slot_updates_stacked(alloc, cfg: T2DRLCfg, state, ks, step, aux_mask,
+                          sample):
+    """Fused-core counterpart of :func:`_slot_updates`: ``alloc`` is the
+    stacked agent, ``ks`` the per-cell key quads ``(B, 4, 2)``, and
+    ``sample(keys) -> minibatch`` draws every cell's own minibatch
+    (``(B, n, ...)`` leaves) in one fused gather.  Key derivations mirror
+    the per-cell ``_slot_updates`` exactly (DESIGN.md §13)."""
+    def one(state, kk):
+        k_samp, k_upd = kk                  # (B, 2) each
+        batch = sample(k_samp)
+        state, _ = alloc.update(state,
+                                {**batch, **_update_aux(step, aux_mask)},
+                                k_upd)
+        return state, None
+    if cfg.updates_per_slot == 1:
+        state, _ = one(state, (ks[:, 2], ks[:, 3]))
+        return state
+    split_n = lambda k: jax.random.split(k, cfg.updates_per_slot)
+    state, _ = jax.lax.scan(
+        one, state,
+        (jnp.moveaxis(jax.vmap(split_n)(ks[:, 2]), 1, 0),
+         jnp.moveaxis(jax.vmap(split_n)(ks[:, 3]), 1, 0)))
     return state
 
 
@@ -607,19 +643,229 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
     return ts, stats
 
 
+def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
+                        train: bool = True, masks=None,
+                        mods: Optional[ScenarioSchedule] = None):
+    """One episode of B INDEPENDENT learners as a single fused batched
+    program (DESIGN.md §13) — the scaling rewrite of
+    ``jax.vmap(_episode_core)``.
+
+    Every learner/buffer leaf carries a leading ``(B,)`` axis; the B
+    per-cell network applies run as single batched contractions
+    (``*_stacked`` paths), the B Adam steps as one fused pass, and the B
+    replay gathers/scatters as one indexed op per leaf.  Per-cell PRNG
+    derivations are replayed verbatim — every split/fold_in of the
+    single-env core is vmapped over the per-cell keys.
+
+    Equivalence contract vs ``jax.vmap(_episode_core)`` (pinned by
+    ``tests/test_fused.py``): every stacked primitive/agent closure is
+    bit-identical leaf for leaf, and all discrete decisions (caching
+    actions, hit ratios, minibatch indices) stay exact at episode level;
+    full episodes agree to float32 round-off only — slot-reward
+    accumulations at the ULP level, trained parameters at ~1e-5 after
+    one episode.  The residue is not a math difference — the minibatch
+    indices, update inputs, and single update steps are bitwise equal —
+    but XLA CPU codegen being context-dependent: two different
+    whole-programs (including the vmap reference vs an isolated replay
+    of its own update chain, measured at ~1e-10/update) fuse the reward
+    sums and chained update arithmetic differently at ULP level, and
+    training's discrete branches (eps-greedy, argmax, feasibility
+    amenders) then amplify ULPs across episodes.
+
+    The update gates use SCALAR predicates (``jnp.all`` over cells) inside
+    real ``lax.cond``s: in independent mode every cell writes exactly K
+    slot items per frame and T-1 frame items per episode in lockstep, so
+    ptr/size are equal across cells and the per-cell predicates of the
+    vmapped reference (which vmap degrades to compute-both-branches
+    ``select``s) always agree — the scalar gate picks the same branch
+    while actually skipping the update work pre-warmup.
+
+    ``step`` values may be per-learner ``(B,)`` arrays (population
+    training): ``eps``/``sigma``/``lr_actor``/``lr_critic`` as in the
+    scalar case, plus ``lr_ddqn`` (cacher learning rate) and ``shape_hit``
+    (a beyond-paper reward-shaping coefficient adding ``shape_hit *
+    mean(hit)`` to the stored slot rewards and the frame reward — the
+    reported stats stay unshaped).  Returns (ts, stats) with per-cell
+    stats of shape (B,)."""
+    env_cfg = cfg.env
+    d3 = cfg.d3pg_cfg()
+    dq = cfg.ddqn_cfg()
+    alloc0, cacher0 = _agents(cfg)
+    alloc = vmap_agent(alloc0, impl="fused")
+    cacher = vmap_agent(cacher0, impl="fused")
+    models: ModelParams = ts["models"]
+    cap_e = d3.buffer
+    B = keys.shape[0]
+    kk = jax.vmap(jax.random.split)(keys)                 # (B, 2, 2)
+    k_env, keyd = kk[:, 0], kk[:, 1]    # per-cell env-reset / driver keys
+    env = env_reset_batch(k_env, env_cfg, schedule_slot_mod(mods, 0))
+    shape_hit = step.get("shape_hit")
+
+    def observe_b(env):
+        return jax.vmap(lambda e, m, mk: observe(e, env_cfg, m, mk))(
+            env, models, masks)                           # (B, S)
+
+    def slot_stats(r, m):
+        return {"r": r, "hit": _batch_mean(m["cached"], masks),
+                "G": _batch_mean(m["G"], masks),
+                "delay": _batch_mean(m["d_tl"], masks),
+                "quality": _batch_mean(m["quality"], masks),
+                "viol": _batch_mean(
+                    (m["d_tl"] > env_cfg.tau).astype(jnp.float32), masks)}
+
+    def frame_step(carry, xs):
+        k_frame, t = xs               # k_frame: (B, 2); t: frame index
+        if alloc0.learns:
+            alloc_state, ebuf, env = carry
+        else:
+            alloc_state, (env,) = ts["d3pg"], carry
+        kf = jax.vmap(lambda k: jax.random.split(k, 3))(k_frame)  # (B, 3, 2)
+        env = jax.vmap(lambda e, P, md: env_advance_frame(e, env_cfg, P, md))(
+            env, schedule_frame_P(mods, t),
+            schedule_slot_mod(mods, t * env_cfg.K))
+        gamma_t = env.gamma_idx                           # (B,)
+        a_int, rho = cacher.act(ts["ddqn"], FrameObs(gamma_t, models),
+                                kf[:, 0], step)
+        env = jax.vmap(env_set_cache)(env, rho)
+        size0 = ebuf["size"] if alloc0.learns else None   # (B,) lockstep
+
+        def slot_step(carry, xs):
+            k_slot, g = xs             # k_slot: (B, 2); g: global slot index
+            if alloc0.learns:
+                alloc_state, env, s = carry
+            else:
+                alloc_state, (env,), s = ts["d3pg"], carry, None
+            ks = jax.vmap(lambda k: jax.random.split(k, 4))(k_slot)
+            b, xi = alloc.act(alloc_state, SlotObs(s, env, models, masks),
+                              ks[:, :2], step)
+            env1, r, m = jax.vmap(
+                lambda e, mo, bb, xx, mk, md: env_step_slot(
+                    e, env_cfg, mo, bb, xx, mk, md))(
+                env, models, b, xi, masks, schedule_slot_mod(mods, g + 1))
+            st = slot_stats(r, m)
+            if not alloc0.learns:
+                return (env1,), st
+            s1 = observe_b(env1)
+            r_store = r if shape_hit is None else r + shape_hit * st["hit"]
+            item = {"s": s, "a": jnp.concatenate([b, xi], axis=-1),
+                    "r": r_store, "s1": s1, "req": env.req, "rho": env.rho,
+                    "req1": env1.req, "rho1": env1.rho}
+            if train:
+                # transitions stored so far = frame-start size + slot count
+                # (writes are batched at frame end); lockstep across cells,
+                # so the scalar all() gate agrees with every per-cell
+                # predicate of the vmapped reference
+                k_in = g - t * env_cfg.K
+                stored = jnp.minimum(size0 + k_in + 1, cap_e)
+                alloc_state = jax.lax.cond(
+                    jnp.all((stored > cfg.warmup) & (size0 > 0)),
+                    lambda st_: _slot_updates_stacked(
+                        alloc, cfg, st_, ks, step, masks,
+                        lambda k: buffer_sample_stacked(ebuf, k, d3.batch)),
+                    lambda st_: st_, alloc_state)
+            return (alloc_state, env1, s1), (st, item)
+
+        g_idx = t * env_cfg.K + jnp.arange(env_cfg.K)
+        slot_keys = jnp.moveaxis(
+            jax.vmap(lambda k: jax.random.split(k, env_cfg.K))(kf[:, 1]),
+            1, 0)                                         # (K, B, 2)
+        if alloc0.learns:
+            s = observe_b(env)
+            (alloc_state, env, _), (stats, items) = jax.lax.scan(
+                slot_step, (alloc_state, env, s), (slot_keys, g_idx))
+            # one fused write per frame: (K, B, ...) -> (B, K, ...)
+            ebuf = buffer_add_many_stacked(
+                ebuf, jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), items))
+        else:
+            (env,), stats = jax.lax.scan(slot_step, (env,),
+                                         (slot_keys, g_idx))
+        storage_viol = (jnp.sum(rho * models.c, axis=-1)
+                        > env_cfg.C).astype(jnp.float32)  # (B,)
+        r_frame = jnp.mean(stats["r"], axis=0) - storage_viol * env_cfg.Xi
+        if shape_hit is not None:
+            r_frame = r_frame + shape_hit * jnp.mean(stats["hit"], axis=0)
+        out = {"gamma": gamma_t, "a_int": a_int, "r_frame": r_frame,
+               "slot": stats, "storage_viol": storage_viol}
+        carry = ((alloc_state, ebuf, env) if alloc0.learns else (env,))
+        return carry, out
+
+    frame_keys = jnp.moveaxis(
+        jax.vmap(lambda k: jax.random.split(k, env_cfg.T))(keyd), 1, 0)
+    frame_xs = (frame_keys, jnp.arange(env_cfg.T))
+    if alloc0.learns:
+        (alloc_state, ebuf, env), frames = jax.lax.scan(
+            frame_step, (ts["d3pg"], ts["ebuf"], env), frame_xs)
+    else:
+        (env,), frames = jax.lax.scan(frame_step, (env,), frame_xs)
+        alloc_state, ebuf = ts["d3pg"], ts["ebuf"]
+
+    cacher_state, fbuf = ts["ddqn"], ts["fbuf"]
+    if cacher0.learns and train:
+        def add_and_update(carry, t):
+            cacher_state, fbuf = carry
+            item = {"s": frames["gamma"][t], "a": frames["a_int"][t],
+                    "r": frames["r_frame"][t], "s1": frames["gamma"][t + 1]}
+            fbuf = buffer_add_batch(fbuf, item)
+
+            def do_update(cs):
+                kb = jax.vmap(lambda k: jax.random.fold_in(k, t))(keyd)
+                batch = buffer_sample_stacked(fbuf, kb, dq.batch)
+                if "lr_ddqn" in step:
+                    batch = {**batch, "lr": step["lr_ddqn"]}
+                cs, _ = cacher.update(cs, batch, kb)
+                return cs
+            cacher_state = jax.lax.cond(
+                jnp.all(fbuf["size"] > dq.batch), do_update,
+                lambda cs: cs, cacher_state)
+            return (cacher_state, fbuf), None
+        (cacher_state, fbuf), _ = jax.lax.scan(
+            add_and_update, (cacher_state, fbuf),
+            jnp.arange(env_cfg.T - 1))
+
+    slot = frames["slot"]                  # leaves (T, K, B)
+    stats = {
+        "episode_reward": jnp.sum(slot["r"], axis=(0, 1)),
+        "mean_reward": jnp.mean(slot["r"], axis=(0, 1)),
+        "hit_ratio": jnp.mean(slot["hit"], axis=(0, 1)),
+        "utility": jnp.mean(slot["G"], axis=(0, 1)),
+        "delay": jnp.mean(slot["delay"], axis=(0, 1)),
+        "quality": jnp.mean(slot["quality"], axis=(0, 1)),
+        "deadline_viol": jnp.mean(slot["viol"], axis=(0, 1)),
+        "storage_viol": jnp.mean(frames["storage_viol"], axis=0),
+    }
+    ts = {"models": models, "d3pg": alloc_state, "ddqn": cacher_state,
+          "ebuf": ebuf, "fbuf": fbuf}
+    return ts, stats
+
+
 def _episode_batch(ts, cfg: T2DRLCfg, keys, step, *, train: bool,
                    masks=None, mods=None):
     """One episode across the batch; keys: (B,) per-cell episode keys.
 
-    ``cfg.policy == "independent"`` vmaps the single-env episode (B
-    independent learners); B=1 bypasses vmap so the single-env program (and
-    its cond-based update gating) is preserved exactly.  ``"shared"``
+    ``cfg.policy == "independent"`` runs B independent learners — as ONE
+    fused batched program (``independent_impl="fused"``, the default) or
+    as the legacy vmap of the single-env episode (``"vmap"``, the
+    bit-identity reference).  B=1 bypasses both so the single-env program
+    (and its cond-based update gating) is preserved exactly — unless the
+    ``step`` dict carries per-cell ``(B,)`` schedule values (population
+    training), which only the fused core understands.  ``"shared"``
     delegates to the shared-learner lockstep core.  ``mods``: optional
     ScenarioSchedule with per-cell (B,)-leading leaves."""
     if cfg.policy == "shared":
         return _episode_core_shared(ts, cfg, keys, step, train=train,
                                     masks=masks, mods=mods)
+    if cfg.independent_impl not in ("fused", "vmap"):
+        raise ValueError(
+            f"unknown independent_impl {cfg.independent_impl!r}; "
+            "expected 'fused' or 'vmap'")
     B = keys.shape[0]
+    pop_step = any(jnp.ndim(v) for v in step.values())
+    if pop_step and cfg.independent_impl != "fused":
+        raise ValueError("per-cell (population) schedules require "
+                         "independent_impl='fused'")
+    if cfg.independent_impl == "fused" and (B > 1 or pop_step):
+        return _episode_core_fused(ts, cfg, keys, step, train=train,
+                                   masks=masks, mods=mods)
     if B == 1:
         mask = None if masks is None else masks[0]
         mods1 = None if mods is None else jax.tree.map(lambda x: x[0], mods)
@@ -654,9 +900,14 @@ _AOT_CACHE: dict = {}
 
 def _episode_compiler_options(cfg: T2DRLCfg, num_envs: int):
     """Compiler options for an episode program: sequential runtime for the
-    single-env and shared-learner scans, default for vmapped independent
-    learners (see block comment above)."""
+    single-env, shared-learner, and fused independent-learner scans —
+    all are one mostly-sequential batched program — default (thunk) only
+    for the legacy vmapped independent path, whose B interleaved
+    per-cell programs benefit from thunk scheduling (see block comment
+    above; DESIGN.md §13)."""
     if cfg.policy == "shared" or num_envs == 1:
+        return _CPU_EPISODE_COMPILER_OPTIONS
+    if cfg.policy == "independent" and cfg.independent_impl == "fused":
         return _CPU_EPISODE_COMPILER_OPTIONS
     return None
 
@@ -711,9 +962,12 @@ def run_episode(ts, cfg: T2DRLCfg, key, eps, sigma, *, train: bool = True,
                              _episode_compiler_options(cfg, 1))
 
 
-def _run_training_impl(ts, key, ep_idx, masks=None, mods=None, *,
-                       cfg: T2DRLCfg, train: bool = True):
-    B = ts["models"].a1.shape[0]
+def _training_xs(cfg: T2DRLCfg, key, ep_idx, B: int, *, train: bool,
+                 pop=None):
+    """Precomputed per-episode scan inputs: per-cell episode keys
+    ``(E, B, 2)`` plus the eps/sigma (and any LR-warmdown) schedule arrays.
+    ``pop`` entries (validated ``(E, B)`` arrays, see ``run_training``)
+    override/extend the scalar schedules with per-member ones."""
     alloc, _ = _agents(cfg)
     e = ep_idx.astype(jnp.float32)
     xs = {"keys": jax.vmap(
@@ -724,7 +978,14 @@ def _run_training_impl(ts, key, ep_idx, masks=None, mods=None, *,
         scale = episode_lr_scale(cfg, e)
         xs["lr_actor"] = cfg.lr_actor * scale
         xs["lr_critic"] = cfg.lr_critic * scale
+    if pop:
+        xs.update(pop)
+    return xs
 
+
+def _scan_episodes(ts, cfg: T2DRLCfg, xs, *, train: bool, masks=None,
+                   mods=None):
+    """Scan the batched episode over precomputed per-episode inputs."""
     def ep_step(ts, x):
         step = {k: v for k, v in x.items() if k != "keys"}
         return _episode_batch(ts, cfg, x["keys"], step, train=train,
@@ -733,27 +994,127 @@ def _run_training_impl(ts, key, ep_idx, masks=None, mods=None, *,
     return jax.lax.scan(ep_step, ts, xs)
 
 
+def _run_training_impl(ts, key, ep_idx, masks=None, mods=None, pop=None, *,
+                       cfg: T2DRLCfg, train: bool = True):
+    B = ts["models"].a1.shape[0]
+    xs = _training_xs(cfg, key, ep_idx, B, train=train, pop=pop)
+    return _scan_episodes(ts, cfg, xs, train=train, masks=masks, mods=mods)
+
+
 _run_training_jit = functools.partial(
     jax.jit, static_argnames=("cfg", "train"),
     donate_argnums=(0,))(_run_training_impl)
 
 
+_POP_KEYS = ("eps", "sigma", "lr_actor", "lr_critic", "lr_ddqn", "shape_hit")
+
+
+def _validate_pop(pop, cfg: T2DRLCfg, B: int, E: int):
+    """Normalize a population-schedule dict to ``(E, B)`` float arrays.
+
+    Allowed keys (DESIGN.md §13): ``eps``, ``sigma``, ``lr_actor``,
+    ``lr_critic``, ``lr_ddqn``, ``shape_hit``.  Entries may be ``(B,)``
+    (constant per member) or ``(E, B)`` (full per-member schedules).
+    Population schedules exist only on the fused independent path."""
+    if pop is None:
+        return None
+    unknown = set(pop) - set(_POP_KEYS)
+    if unknown:
+        raise ValueError(f"unknown population keys {sorted(unknown)}; "
+                         f"expected a subset of {_POP_KEYS}")
+    if cfg.policy != "independent" or cfg.independent_impl != "fused":
+        raise ValueError(
+            "population schedules require policy='independent' and "
+            "independent_impl='fused' (DESIGN.md §13)")
+    out = {}
+    for k, v in pop.items():
+        v = jnp.asarray(v, jnp.float32)
+        if v.ndim == 1:
+            v = jnp.broadcast_to(v[None], (E,) + v.shape)
+        if v.shape != (E, B):
+            raise ValueError(f"population key {k!r} must be (B,)=({B},) or "
+                             f"(E, B)=({E}, {B}); got {v.shape}")
+        out[k] = v
+    # Agent.update consumes lr_actor/lr_critic as a pair — fill a missing
+    # partner with the configured constant so the aux dict stays complete
+    if ("lr_actor" in out) != ("lr_critic" in out):
+        k_have = "lr_actor" if "lr_actor" in out else "lr_critic"
+        k_miss = "lr_critic" if k_have == "lr_actor" else "lr_actor"
+        const = cfg.lr_critic if k_miss == "lr_critic" else cfg.lr_actor
+        out[k_miss] = jnp.full((E, B), const, jnp.float32)
+    return out
+
+
 def run_training(ts, cfg: T2DRLCfg, key, ep_idx, masks=None, mods=None, *,
-                 train: bool = True):
+                 train: bool = True, pop=None):
     """Scan the batched episode over the (absolute) episode indices
     ``ep_idx`` — a whole multi-episode, multi-cell run in one compiled call.
     Epsilon/sigma (and any LR-warmdown) schedules are precomputed arrays
     fed to the scan as inputs.  ``mods``: optional ScenarioSchedule with
     per-cell (B,)-leading leaves, replayed every episode.
 
+    ``pop``: optional population-schedule dict (DESIGN.md §13) giving each
+    of the B cells its OWN hyperparameters — keys among ``eps``, ``sigma``,
+    ``lr_actor``, ``lr_critic``, ``lr_ddqn``, ``shape_hit``; values
+    ``(B,)`` or ``(E, B)`` arrays.  One compiled call then trains B
+    population members that differ in those knobs (fused independent
+    mode only).
+
     ``ts`` is DONATED to the computation (its buffers are reused in place);
     use the returned state and do not touch the argument afterwards.
     Returns (ts, history) with history leaves of shape (len(ep_idx), B)."""
     B = ts["models"].a1.shape[0]
+    pop = _validate_pop(pop, cfg, B, len(ep_idx))
     return _aot_episode_call("train", _run_training_jit,
                              {"cfg": cfg, "train": train},
-                             (ts, key, ep_idx, masks, mods),
+                             (ts, key, ep_idx, masks, mods, pop),
                              _episode_compiler_options(cfg, B))
+
+
+def run_training_sharded(ts, cfg: T2DRLCfg, key, ep_idx, masks=None, *,
+                         train: bool = True, pop=None, mesh=None):
+    """``run_training`` with the B independent cells sharded across devices
+    via ``jax.experimental.shard_map`` (opt-in, DESIGN.md §13).
+
+    Each device runs the fused episode program on its contiguous slice of
+    cells; there is no cross-cell communication (independent learners), so
+    the result equals the single-device ``run_training`` — per-cell episode
+    keys are derived from GLOBAL cell indices *before* sharding, and each
+    shard replays exactly its cells' PRNG streams
+    (``tests/test_fused.py`` pins the equivalence under a forced host
+    device count).
+
+    ``mesh`` defaults to a 1-D ``("cells",)`` mesh over every visible
+    device (``repro.launch.mesh.make_cells_mesh``); on CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before first
+    jax use to expose N devices.  B must divide evenly across the mesh.
+    ``mods`` schedules are not supported on this path; ``ts`` is not
+    donated."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    if cfg.policy != "independent" or cfg.independent_impl != "fused":
+        raise ValueError("run_training_sharded requires policy="
+                         "'independent' and independent_impl='fused'")
+    B = ts["models"].a1.shape[0]
+    if mesh is None:
+        from repro.launch.mesh import make_cells_mesh
+        mesh = make_cells_mesh()
+    n = int(mesh.devices.size)
+    if B % n:
+        raise ValueError(f"num_envs={B} must be divisible by the mesh's "
+                         f"{n} devices")
+    pop = _validate_pop(pop, cfg, B, len(ep_idx))
+    xs = _training_xs(cfg, key, ep_idx, B, train=train, pop=pop)
+    xs_specs = {k: (P(None, "cells") if jnp.ndim(v) > 1 else P(None))
+                for k, v in xs.items()}
+
+    def local(ts_, xs_, masks_):
+        return _scan_episodes(ts_, cfg, xs_, train=train, masks=masks_)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P("cells"), xs_specs, P("cells")),
+                   out_specs=(P("cells"), P(None, "cells")))
+    return jax.jit(fn)(ts, xs, masks)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

@@ -46,3 +46,28 @@ def denoiser_apply(p, x, l, state, *, time_dim: int = TIME_DIM):
         h = jax.nn.relu(h @ layer["w"] + layer["b"])
     out = h @ layers[-1]["w"] + layers[-1]["b"]
     return out
+
+
+def _stacked_linear(x, w, b):
+    # mirrors repro.core.networks.stacked_linear; duplicated (5 lines) so
+    # repro.diffusion never imports the repro.core package surface — d3pg
+    # imports this package, and a back-import would cycle at init time
+    y = jnp.einsum("b...i,bio->b...o", x, w)
+    return y + b.reshape((b.shape[0],) + (1,) * (y.ndim - 2) + (b.shape[-1],))
+
+
+def denoiser_apply_stacked(p, x, l, state, *, time_dim: int = TIME_DIM):
+    """``denoiser_apply`` over B stacked parameter sets (DESIGN.md §13).
+
+    p: per-learner params with a leading ``(B,)`` axis on every leaf;
+    x: ``(B, ..., A)``; state: ``(B, ..., S)``; l: scalar denoising step
+    shared by the whole stack.  One batched ``(B, ..., in) × (B, in, out)``
+    contraction per layer — bit-identical to ``jax.vmap(denoiser_apply)``
+    (pinned by ``tests/test_fused.py``)."""
+    te = time_embedding(l, time_dim)
+    te = jnp.broadcast_to(te, x.shape[:-1] + te.shape[-1:])
+    h = jnp.concatenate([x, state, te], axis=-1)
+    layers = p["layers"]
+    for layer in layers[:-1]:
+        h = jax.nn.relu(_stacked_linear(h, layer["w"], layer["b"]))
+    return _stacked_linear(h, layers[-1]["w"], layers[-1]["b"])

@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .denoiser import denoiser_apply
+from .denoiser import denoiser_apply, denoiser_apply_stacked
 from .schedule import DiffusionSchedule
 
 
@@ -54,4 +54,52 @@ def reverse_sample_actions(p, sched: DiffusionSchedule, state, key,
                            action_dim: int, *, impl: str = "xla"):
     """Action in [0, 1]^A (the paper's raw action range)."""
     x0 = reverse_sample(p, sched, state, key, action_dim, impl=impl)
+    return 0.5 * (x0 + 1.0)
+
+
+def reverse_sample_stacked(p, sched: DiffusionSchedule, state, keys,
+                           action_dim: int):
+    """B fused reverse chains: one L-step scan denoises all B actors per
+    step (DESIGN.md §13).
+
+    p: stacked denoiser params (leading ``(B,)`` on every leaf); state:
+    ``(B, ..., S)``; keys: ``(B, 2)`` — one chain key per learner, split
+    and consumed exactly as the per-learner ``reverse_sample`` does, so
+    the PRNG stream (and hence the output) is bit-identical to
+    ``jax.vmap(reverse_sample)`` (pinned by ``tests/test_fused.py``).
+    The per-learner noise draws stay vmapped (elementwise threefry fuses
+    fine); what the fused path buys is the denoiser matmuls of all B
+    learners advancing as single batched contractions inside ONE scan
+    instead of B interleaved small per-learner programs."""
+    L = sched.L
+    batch_shape = state.shape[1:-1]
+    kk = jax.vmap(jax.random.split)(keys)                       # (B, 2, 2)
+    x_L = jax.vmap(
+        lambda k: jax.random.normal(k, batch_shape + (action_dim,)))(kk[:, 0])
+    noises = jax.vmap(
+        lambda k: jax.random.normal(
+            k, (L,) + batch_shape + (action_dim,)))(kk[:, 1])
+    noises = jnp.moveaxis(noises, 1, 0)                # (L, B, ..., A)
+
+    def step(x, inp):
+        l_rev, eps_noise = inp          # l_rev runs L-1 .. 0 (0-based index)
+        eps_hat = denoiser_apply_stacked(
+            p, x, (l_rev + 1).astype(jnp.float32), state)
+        alpha = sched.alphas[l_rev]
+        abar = sched.alpha_bars[l_rev]
+        btilde = sched.beta_tildes[l_rev]
+        mu = (x - (1 - alpha) / jnp.sqrt(1 - abar) * eps_hat) \
+            / jnp.sqrt(alpha)
+        x = mu + jnp.where(l_rev > 0, jnp.sqrt(btilde), 0.0) * eps_noise
+        return x, None
+
+    ls = jnp.arange(L - 1, -1, -1)
+    x0, _ = jax.lax.scan(step, x_L, (ls, noises))
+    return jnp.tanh(x0)
+
+
+def reverse_sample_actions_stacked(p, sched: DiffusionSchedule, state, keys,
+                                   action_dim: int):
+    """Stacked-learner action in [0, 1]^A; see ``reverse_sample_stacked``."""
+    x0 = reverse_sample_stacked(p, sched, state, keys, action_dim)
     return 0.5 * (x0 + 1.0)

@@ -24,6 +24,17 @@ def make_host_mesh() -> Mesh:
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_cells_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D ``("cells",)`` mesh for sharding independent edge cells across
+    devices (``repro.core.t2drl.run_training_sharded``, DESIGN.md §13).
+
+    ``n_devices`` defaults to every visible device; on CPU, multiple
+    devices are obtained with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return jax.make_mesh((n,), ("cells",))
+
+
 def batch_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

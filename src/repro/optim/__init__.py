@@ -1,3 +1,4 @@
-from .adam import (adam_init, adam_update, clip_by_global_norm,  # noqa: F401
-                   global_norm)
+from .adam import (adam_init, adam_init_stacked, adam_update,  # noqa: F401
+                   adam_update_stacked, clip_by_global_norm, global_norm,
+                   global_norm_stacked)
 from .schedules import constant, cosine_decay, linear_warmup_cosine  # noqa: F401

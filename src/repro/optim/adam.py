@@ -58,3 +58,87 @@ def adam_update(grads, state, params, *, lr, b1: float = 0.9,
     new_mu = treedef.unflatten([o[1] for o in out])
     new_nu = treedef.unflatten([o[2] for o in out])
     return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {"gnorm": gnorm}
+
+
+# -- fused B-learner Adam (DESIGN.md §13) -------------------------------------
+#
+# Stacked layout: every param/moment leaf carries a leading (B,) learner
+# axis and the step counter is (B,) int32 — exactly what
+# jax.vmap(adam_init) produces, so vmapped and fused states interchange
+# freely.  The fused update advances all B learners in ONE elementwise
+# pass per leaf (per-learner scalars broadcast over trailing axes) instead
+# of B per-learner passes; bit-identity with jax.vmap(adam_update) is
+# pinned by tests/test_fused.py.
+
+
+def _per_learner(v, ndim):
+    """Broadcast a per-learner (B,) scalar against a (B, ...) leaf of rank
+    ``ndim`` (python scalars pass through)."""
+    v = jnp.asarray(v, jnp.float32)
+    if v.ndim == 0:
+        return v
+    return v.reshape(v.shape + (1,) * (ndim - 1))
+
+
+def global_norm_stacked(tree):
+    """Per-learner global norms: (B,) — one reduction over the non-learner
+    axes of every leaf, summed across leaves in flatten order (the same
+    accumulation order the vmapped per-learner norm uses)."""
+    total = None
+    for x in jax.tree.leaves(tree):
+        s = jnp.sum(jnp.square(x.astype(jnp.float32)),
+                    axis=tuple(range(1, x.ndim)))
+        total = s if total is None else total + s
+    return jnp.sqrt(total)
+
+
+def adam_init_stacked(params, *, moment_dtype=jnp.float32):
+    """Fresh optimizer state for stacked (leading ``(B,)``) params —
+    layout-identical to ``jax.vmap(adam_init)``."""
+    B = jax.tree.leaves(params)[0].shape[0]
+    zeros = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((B,), jnp.int32)}
+
+
+def adam_update_stacked(grads, state, params, *, lr, b1: float = 0.9,
+                        b2: float = 0.999, eps: float = 1e-8,
+                        weight_decay: float = 0.0, max_norm: float = 0.0):
+    """B independent Adam steps fused into one batched pass.
+
+    ``grads``/``state``/``params`` leaves carry a leading ``(B,)`` learner
+    axis; ``lr`` is a python scalar or a per-learner ``(B,)`` array (the
+    population-sweep lever, DESIGN.md §13).  Returns
+    ``(new_params, new_state, {"gnorm": (B,)})``."""
+    gnorm = global_norm_stacked(grads)
+    if max_norm:
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(
+            lambda g: g * _per_learner(scale, g.ndim), grads)
+    step = state["step"] + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)          # (B,)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        gf = g.astype(jnp.float32)
+        mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * gf
+        nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * gf * gf
+        lr_b = _per_learner(lr, p.ndim)
+        delta = lr_b * (mu_n / _per_learner(b1c, p.ndim)) \
+            / (jnp.sqrt(nu_n / _per_learner(b2c, p.ndim)) + eps)
+        if weight_decay:
+            delta = delta + lr_b * weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - delta).astype(p.dtype),
+                mu_n.astype(mu.dtype), nu_n.astype(nu.dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(g, mu, nu, p)
+           for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {"gnorm": gnorm}
