@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (T2DRLCfg, EnvCfg, eval_t2drl, t2drl_init,
-                        t2drl_init_batch, train_t2drl)
+from repro.core import (CACHE_POLICIES, T2DRLCfg, EnvCfg, eval_t2drl,
+                        t2drl_init, t2drl_init_batch, train_t2drl)
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
 
@@ -34,7 +34,24 @@ def method_cfg(method: str, *, env: EnvCfg, episodes: int,
         return T2DRLCfg(allocator="schrs", cacher="static", **base)
     if method == "rcars":
         return T2DRLCfg(allocator="rcars", cacher="random", **base)
+    if method.startswith("cacher-"):
+        # isolated-cacher ablation: pin the allocator to the deterministic
+        # RCARS heuristic so cross-cacher deltas measure ONLY the caching
+        # policy (DDQN vs the classical ARC/LRU/LFU baselines, §14)
+        return T2DRLCfg(allocator="rcars", cacher=method[len("cacher-"):],
+                        **base)
     raise ValueError(method)
+
+
+def _needs_training(method: str) -> bool:
+    """Whether eval-time state depends on a training pass: the learned
+    methods, the isolated DDQN cacher, and the STATEFUL classical cachers
+    (their resident set is built by replaying request streams)."""
+    if method in ("t2drl", "ddpg"):
+        return True
+    if method.startswith("cacher-"):
+        return method[len("cacher-"):] in ("ddqn",) + CACHE_POLICIES
+    return False
 
 
 def train_and_eval(method: str, *, env: EnvCfg, episodes: int,
@@ -54,7 +71,7 @@ def train_and_eval(method: str, *, env: EnvCfg, episodes: int,
     cfg = method_cfg(method, env=env, episodes=episodes, L=L, seed=seed,
                      **overrides)
     t0 = time.time()
-    if method in ("t2drl", "ddpg"):
+    if _needs_training(method):
         ts, hist = train_t2drl(cfg, episodes=episodes, num_envs=num_envs,
                                mods=mods, user_counts=user_counts,
                                share_models=share_models)

@@ -19,7 +19,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-scale smoke: runtime runs the throughput "
                          "floor + independent fused gates, population "
-                         "runs the one-compile 16-member sweep")
+                         "runs the one-compile 16-member sweep, cache "
+                         "runs the DDQN-vs-classical cacher scoreboard")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     episodes = 500 if args.full else 60
@@ -65,11 +66,16 @@ def main() -> None:
         bench_users.run(users=(10, 14, 18) if not args.full
                         else (10, 12, 14, 16, 18), episodes=episodes)
     if want("cache"):
-        print("\n== Fig 8: cache sweep ==", flush=True)
         from . import bench_cache
-        bench_cache.run(capacities=(20.0, 26.0, 32.0) if not args.full
-                        else (20.0, 23.0, 26.0, 29.0, 32.0),
-                        episodes=episodes)
+        if args.smoke:
+            print("\n== cache smoke: DDQN vs classical cacher scoreboard ==",
+                  flush=True)
+            bench_cache.run_smoke()
+        else:
+            print("\n== Fig 8: cache sweep ==", flush=True)
+            bench_cache.run(capacities=(20.0, 26.0, 32.0) if not args.full
+                            else (20.0, 23.0, 26.0, 29.0, 32.0),
+                            episodes=episodes)
     if want("scenarios"):
         print("\n== scenario registry: workloads x methods ==", flush=True)
         from . import bench_scenarios

@@ -15,7 +15,7 @@ from .base import (Agent, FrameObs, SlotObs, no_update,  # noqa: F401
                    vmap_agent)
 from .allocators import (ALLOCATORS, d3pg_allocator, make_allocator,  # noqa: F401
                          rcars_allocator, schrs_allocator)
-from .cachers import (CACHERS, ddqn_cacher, make_cacher,  # noqa: F401
-                      random_cacher, static_cacher)
+from .cachers import (CACHERS, classical_cacher, ddqn_cacher,  # noqa: F401
+                      make_cacher, random_cacher, static_cacher)
 from .compat import (d3pg_init_batch, d3pg_update_batch,  # noqa: F401
                      ddqn_init_batch, ddqn_update_batch)

@@ -102,6 +102,15 @@ class Agent(NamedTuple):
         fallback is used.
     update_stacked : callable, optional
         Fused B-learner ``update``; same contract as ``act_stacked``.
+    step_frame : callable, optional
+        Per-frame deterministic state advance for STATEFUL non-learned
+        cachers (the classical cache hierarchy, DESIGN.md §14):
+        ``step_frame(state, reqs, models, mask) -> state`` replays the
+        frame's ``(K, U)`` request stream through the cacher's internal
+        state machine after the frame's slots have been served.  ``None``
+        (every learned/stateless agent) keeps the driver's compiled
+        program byte-identical to the pre-§14 one; the driver branches on
+        ``step_frame is not None`` python-statically.
     """
     name: str
     learns: bool
@@ -113,6 +122,7 @@ class Agent(NamedTuple):
     batch_act: Optional[Callable] = None
     act_stacked: Optional[Callable] = None
     update_stacked: Optional[Callable] = None
+    step_frame: Optional[Callable] = None
 
 
 def no_update(state, batch, key):
@@ -157,4 +167,8 @@ def vmap_agent(agent: Agent, impl: str = "fused") -> Agent:
         batch_act=None,
         act_stacked=None,
         update_stacked=None,
+        # step_frame stays unbatched on the factory agent — the episode
+        # cores vmap it explicitly over (state, reqs, models, mask), which
+        # this wrapper cannot know the in_axes of
+        step_frame=None,
     )

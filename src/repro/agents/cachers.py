@@ -4,6 +4,15 @@ Cacher ``act`` returns ``(a_int, rho)`` — the raw integer action (what the
 DDQN frame transition stores) and the amended caching vector.  As with the
 allocators, closures call the numeric cores (``repro.core.ddqn`` /
 ``repro.core.baselines``) verbatim.
+
+Beyond the paper's ddqn/static/random triple, :func:`classical_cacher`
+exposes the adaptive cache-hierarchy baselines of DESIGN.md §14
+(LRU/LFU/ghost-LRU/ARC from ``repro.core.cache_policies``) as STATEFUL
+non-learned agents: ``act`` just snapshots the resident set into the
+frame's caching vector, and the optional ``step_frame`` closure replays
+the frame's request stream through the array state machine afterwards —
+so the cache serving frame ``t`` reflects exactly the requests of frames
+``< t`` (same causality as the DDQN's popularity-state conditioning).
 """
 from __future__ import annotations
 
@@ -11,6 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.baselines import random_cache, static_popular_cache
+from repro.core.cache_policies import (CACHE_POLICIES, cache_access,
+                                       cache_rho, cache_state_init,
+                                       quantize_capacity, quantize_sizes)
 from repro.core.ddqn import (DDQNCfg, amend_caching, ddqn_act,
                              ddqn_act_stacked, ddqn_init, ddqn_update,
                              ddqn_update_stacked)
@@ -112,7 +124,53 @@ def random_cacher(env_cfg: EnvCfg) -> Agent:
                  batch_act=batch_act)
 
 
-CACHERS = ("ddqn", "static", "random")
+def classical_cacher(kind: str, env_cfg: EnvCfg) -> Agent:
+    """A classical cache-hierarchy baseline (DESIGN.md §14) as an Agent.
+
+    The agent's state is the ``repro.core.cache_policies`` array state
+    machine (the driver threads it through the ``"cache"`` TrainState
+    slot).  ``act`` is a pure snapshot — it returns the resident set as
+    the frame's caching vector and is batch-transparent (every state op
+    is elementwise over the trailing ``(M,)`` axis).  ``step_frame``
+    replays the frame's ``(K, U)`` request stream through the policy's
+    access function via one ``lax.scan`` (row-major: slot 0's users
+    first, users in index order within a slot — the tie-break order the
+    Python references in ``tests/_cache_refs.py`` mirror).  Inactive
+    users (``mask``) are replayed as no-op accesses."""
+    if kind not in CACHE_POLICIES:
+        raise ValueError(f"unknown cache policy {kind!r}; expected one of "
+                         f"{CACHE_POLICIES}")
+    cap_units = quantize_capacity(env_cfg.C)
+
+    def act(state, obs, key, step):
+        a_int = jnp.zeros(jnp.shape(obs.gamma_idx), jnp.int32)
+        return a_int, cache_rho(state)
+
+    def step_frame(state, reqs, models, mask):
+        c_units = quantize_sizes(models.c)
+        stream = reqs.reshape(-1)                       # (K*U,) row-major
+        if mask is None:
+            valid = jnp.ones(stream.shape, jnp.bool_)
+        else:
+            valid = jnp.tile(mask.astype(jnp.bool_), reqs.shape[0])
+
+        def one(st, mx):
+            m, v = mx
+            st, _ = cache_access(kind, st, m, c_units, cap_units, v)
+            return st, None
+
+        state, _ = jax.lax.scan(one, state, (stream, valid))
+        return state
+
+    return Agent(name=kind, learns=False,
+                 init=lambda key: cache_state_init(env_cfg.M),
+                 act=act, update=no_update,
+                 export=lambda state: {"cache": {"rho": cache_rho(state)}},
+                 greedy=lambda policy, obs, key: policy["cache"]["rho"],
+                 step_frame=step_frame)
+
+
+CACHERS = ("ddqn", "static", "random") + CACHE_POLICIES
 
 
 def make_cacher(kind: str, dq: DDQNCfg, env_cfg: EnvCfg) -> Agent:
@@ -124,4 +182,6 @@ def make_cacher(kind: str, dq: DDQNCfg, env_cfg: EnvCfg) -> Agent:
         return static_cacher(env_cfg)
     if kind == "random":
         return random_cacher(env_cfg)
+    if kind in CACHE_POLICIES:
+        return classical_cacher(kind, env_cfg)
     raise ValueError(f"unknown cacher {kind!r}; expected one of {CACHERS}")

@@ -14,7 +14,8 @@ slices from ``export_policy``).  Two things the raw codec cannot do alone:
 
 The unified TrainState layout (DESIGN.md §12) keeps this codec agent-kind
 agnostic: ``repro.core.t2drl_init`` always produces ``{"models", "d3pg",
-"ddqn", "ebuf", "fbuf"}`` regardless of method, and ``export_policy``
+"ddqn", "ebuf", "fbuf", "cache"}`` regardless of method (``"cache"`` is
+the classical-cacher state machine, DESIGN.md §14), and ``export_policy``
 delegates to ``Agent.export`` for the inference slice — so the same
 save/restore path covers every allocator/cacher combination and both
 vector-env modes without special cases (batched round-trip pinned in

@@ -18,6 +18,9 @@ from .buffers import (buffer_add, buffer_add_batch, buffer_add_many,  # noqa: F4
 from .baselines import (GACfg, ga_allocate, random_cache,  # noqa: F401
                         random_cache_batch, rcars_allocate,
                         static_popular_cache, static_popular_cache_batch)
+from .cache_policies import (CACHE_POLICIES, cache_access, cache_rho,  # noqa: F401
+                             cache_state_init, quantize_capacity,
+                             quantize_sizes)
 from .t2drl import (T2DRLCfg, episode_epsilon, episode_lr_scale,  # noqa: F401
                     episode_sigma, eval_t2drl, export_policy,
                     greedy_frame_cache, greedy_slot_action, run_episode,

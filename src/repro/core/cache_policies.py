@@ -1,0 +1,328 @@
+"""Classical cache-hierarchy state machines (DESIGN.md §14): LRU / LFU /
+ghost-augmented LRU / ARC as jit/scan-safe fixed-size array programs.
+
+These are the adaptive baselines the DDQN cacher has to beat — a learned
+cacher that cannot beat ARC rejects nothing (ROADMAP).  Unlike the usual
+pointer-and-dict implementations, every policy here is a pure function over
+a fixed-size state dict of ``(M,)`` membership/timestamp arrays, so it
+scans, vmaps, and checkpoints exactly like the learned agents:
+
+- the item universe is the ``M`` GenAI model types, so recency/frequency/
+  ghost *lists* are encoded as ``(M,)`` membership masks plus ``(M,)``
+  int32 access/ghost timestamps (list order = timestamp order, ties are
+  impossible for live timestamps and break toward the lowest model id via
+  argmin-first-occurrence);
+- capacity is accounted in INTEGER size units (``SIZE_UNITS_PER_GB``-ths
+  of a GB, conservatively rounded: item sizes ceil, capacity floor), so
+  every admission/eviction decision is exact integer arithmetic — the
+  pure-Python references in ``tests/_cache_refs.py`` reproduce the jitted
+  decision traces bit-for-bit, which is what the differential test suite
+  (``tests/test_cachers.py``) pins;
+- eviction loops are ``fori_loop``s bounded by ``M`` (each pass evicts at
+  most one resident item), never data-dependent ``while`` loops.
+
+Scan-safe ARC (vs pointer ARC, Megiddo & Modha 2003): the four cases are
+computed branch-free and gated by the case booleans; REPLACE ghosts every
+cache eviction (T1→B1, T2→B2); and instead of the textbook pre-insert
+directory juggling, the ARC directory invariants (|T1|+|B1| ≤ c in size
+units, total directory ≤ 2c) are restored by trimming the OLDEST ghosts
+after every access.  The adaptation target ``p`` lives in integer size
+units and moves by ``max(size(x), (other_ghost_units // own_ghost_units) *
+size(x))`` — the size-aware analogue of the classic ±max(1, |B2|/|B1|).
+
+Every ``*_access`` has the same signature::
+
+    state, info = <kind>_access(state, m, c_units, cap_units, valid)
+
+``m`` the accessed model id, ``c_units`` the ``(M,)`` int32 item sizes,
+``cap_units`` the capacity, ``valid`` a bool gate (False = full no-op, the
+lever that makes masked-user streams scan-safe).  ``info`` records the
+decision trace: ``hit``, ``admitted``, and the ``(M,)`` ``evicted`` mask.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# Integer capacity resolution: 64 units per GB (power of two, so the
+# float32 GB -> unit scaling in quantize_sizes is exact).
+SIZE_UNITS_PER_GB = 64
+
+_I32_MAX = jnp.int32(2 ** 31 - 1)
+
+CACHE_POLICIES = ("lru", "lfu", "lru-ghost", "arc")
+
+
+def quantize_sizes(c) -> jnp.ndarray:
+    """Model sizes (GB, float) -> conservative integer units (ceil)."""
+    return jnp.ceil(jnp.asarray(c) * SIZE_UNITS_PER_GB).astype(jnp.int32)
+
+
+def quantize_capacity(C: float) -> int:
+    """Cache capacity (GB) -> conservative integer units (floor).
+
+    ceil on items + floor on capacity means a unit-feasible cache content
+    is always GB-feasible: ``sum(c * rho) <= sum(c_units) / Q <=
+    cap_units / Q <= C`` — classical cachers can never trip the storage
+    penalty (11d)."""
+    return int(math.floor(C * SIZE_UNITS_PER_GB))
+
+
+def cache_state_init(M: int) -> dict:
+    """Fresh (empty) cache state — one fixed layout for every policy.
+
+    ``in_t1``/``in_t2`` are the resident lists (plain LRU/LFU use only
+    ``in_t1``; ARC splits recent/frequent), ``in_b1``/``in_b2`` the ghost
+    lists, ``last``/``glast`` the access/ghost-entry clocks, ``freq`` the
+    in-cache access counts (LFU), ``time`` the logical access clock and
+    ``p`` ARC's adaptation target in size units.  Unused leaves stay at
+    their init value, so the TrainState ``"cache"`` slot has one shape
+    regardless of which cacher runs (DESIGN.md §12/§14)."""
+    z = jnp.zeros((M,), jnp.bool_)
+    return {
+        "in_t1": z, "in_t2": z, "in_b1": z, "in_b2": z,
+        "last": jnp.full((M,), -1, jnp.int32),
+        "glast": jnp.full((M,), -1, jnp.int32),
+        "freq": jnp.zeros((M,), jnp.int32),
+        "time": jnp.int32(0),
+        "p": jnp.int32(0),
+    }
+
+
+def cache_rho(state) -> jnp.ndarray:
+    """Resident set as the env's float 0/1 caching vector (batch-safe)."""
+    return (state["in_t1"] | state["in_t2"]).astype(jnp.float32)
+
+
+def _units(members, c_units):
+    """Total size units of a membership mask (exact integer sum)."""
+    return jnp.sum(jnp.where(members, c_units, 0))
+
+
+def _evict_oldest(members, order, c_units, budget):
+    """Evict members in increasing ``order`` (argmin-first: ties -> lowest
+    id) until their total size fits ``budget``.  Returns the trimmed mask
+    and the evicted mask.  Bounded ``fori_loop`` over M."""
+    M = members.shape[0]
+
+    def body(_, carry):
+        mem, ev = carry
+        need = _units(mem, c_units) > budget
+        victim = jnp.argmin(jnp.where(mem, order, _I32_MAX))
+        do = need & jnp.any(mem)
+        return (jnp.where(do, mem.at[victim].set(False), mem),
+                jnp.where(do, ev.at[victim].set(True), ev))
+
+    return jax.lax.fori_loop(
+        0, M, body, (members, jnp.zeros((M,), jnp.bool_)))
+
+
+def _gate(valid, new_state, old_state, info):
+    """valid=False -> full no-op (state unchanged, all-false trace)."""
+    state = jax.tree.map(lambda n, o: jnp.where(valid, n, o),
+                         new_state, old_state)
+    info = {k: jnp.where(valid, v, jnp.zeros_like(v))
+            for k, v in info.items()}
+    return state, info
+
+
+# -- LRU ----------------------------------------------------------------------
+
+def lru_access(state, m, c_units, cap_units, valid=True):
+    """Least-recently-used: hit refreshes recency; a miss that can ever fit
+    (size <= capacity) evicts LRU residents until it fits, then admits."""
+    t = state["time"] + 1
+    in_c, last = state["in_t1"], state["last"]
+    hit = in_c[m]
+    fits = c_units[m] <= cap_units
+    admit = ~hit & fits
+    mem_m, ev = _evict_oldest(in_c, last, c_units,
+                              cap_units - c_units[m])
+    in_c_new = jnp.where(hit, in_c,
+                         jnp.where(admit, mem_m.at[m].set(True), in_c))
+    last_new = jnp.where(hit | admit, last.at[m].set(t), last)
+    new = dict(state, in_t1=in_c_new, last=last_new, time=t)
+    info = {"hit": hit, "admitted": admit,
+            "evicted": jnp.where(admit, ev, jnp.zeros_like(ev))}
+    return _gate(valid, new, state, info)
+
+
+# -- LFU ----------------------------------------------------------------------
+
+def _evict_lfu(members, freq, last, c_units, budget):
+    """LFU eviction: lowest in-cache frequency first, ties by least-recent
+    access, then lowest id.  Evicted items have their count reset (no
+    frequency memory across residencies)."""
+    M = members.shape[0]
+
+    def body(_, carry):
+        mem, fr, ev = carry
+        need = _units(mem, c_units) > budget
+        fmin = jnp.min(jnp.where(mem, fr, _I32_MAX))
+        cand = mem & (fr == fmin)
+        victim = jnp.argmin(jnp.where(cand, last, _I32_MAX))
+        do = need & jnp.any(mem)
+        return (jnp.where(do, mem.at[victim].set(False), mem),
+                jnp.where(do, fr.at[victim].set(0), fr),
+                jnp.where(do, ev.at[victim].set(True), ev))
+
+    return jax.lax.fori_loop(
+        0, M, body, (members, freq, jnp.zeros((M,), jnp.bool_)))
+
+
+def lfu_access(state, m, c_units, cap_units, valid=True):
+    """Least-frequently-used with in-cache counts (reset on eviction);
+    recency breaks frequency ties."""
+    t = state["time"] + 1
+    in_c, last, freq = state["in_t1"], state["last"], state["freq"]
+    hit = in_c[m]
+    fits = c_units[m] <= cap_units
+    admit = ~hit & fits
+    mem_m, freq_m, ev = _evict_lfu(in_c, freq, last, c_units,
+                                   cap_units - c_units[m])
+    in_c_new = jnp.where(hit, in_c,
+                         jnp.where(admit, mem_m.at[m].set(True), in_c))
+    freq_new = jnp.where(hit, freq.at[m].add(1),
+                         jnp.where(admit, freq_m.at[m].set(1), freq))
+    last_new = jnp.where(hit | admit, last.at[m].set(t), last)
+    new = dict(state, in_t1=in_c_new, last=last_new, freq=freq_new, time=t)
+    info = {"hit": hit, "admitted": admit,
+            "evicted": jnp.where(admit, ev, jnp.zeros_like(ev))}
+    return _gate(valid, new, state, info)
+
+
+# -- ghost-augmented LRU (admission-filtered) ---------------------------------
+
+def lru_ghost_access(state, m, c_units, cap_units, valid=True):
+    """LRU with a ghost-list admission filter (a TinyLFU-style doorkeeper):
+    a first-touch miss only RECORDS the id in the ghost list; a miss whose
+    id is ghost-listed (recently seen or recently evicted) is admitted.
+    One-hit wonders therefore never displace residents.  Evicted items
+    re-enter the ghost list; the ghost list itself is LRU-bounded to
+    ``cap_units`` worth of ids."""
+    t = state["time"] + 1
+    in_c, in_g = state["in_t1"], state["in_b1"]
+    last, glast = state["last"], state["glast"]
+    hit = in_c[m]
+    fits = c_units[m] <= cap_units
+    ghost_hit = ~hit & in_g[m]
+    admit = ghost_hit & fits
+    record = ~hit & ~ghost_hit            # first touch: doorkeeper entry
+    mem_m, ev = _evict_oldest(in_c, last, c_units,
+                              cap_units - c_units[m])
+    ev = jnp.where(admit, ev, jnp.zeros_like(ev))
+    in_c_new = jnp.where(hit, in_c,
+                         jnp.where(admit, mem_m.at[m].set(True), in_c))
+    last_new = jnp.where(hit | admit, last.at[m].set(t), last)
+    # ghost bookkeeping: admitted ids leave, victims and first-touches enter
+    in_g_new = jnp.where(admit, in_g.at[m].set(False), in_g)
+    in_g_new = in_g_new | ev
+    in_g_new = jnp.where(record, in_g_new.at[m].set(True), in_g_new)
+    glast_new = jnp.where(ev, t, glast)
+    glast_new = jnp.where(record, glast_new.at[m].set(t), glast_new)
+    in_g_new, _ = _evict_oldest(in_g_new, glast_new, c_units, cap_units)
+    new = dict(state, in_t1=in_c_new, in_b1=in_g_new, last=last_new,
+               glast=glast_new, time=t)
+    info = {"hit": hit, "admitted": admit, "evicted": ev}
+    return _gate(valid, new, state, info)
+
+
+# -- ARC ----------------------------------------------------------------------
+
+def _arc_replace(t1, t2, b1, b2, last, glast, p, b2_hit, do, size_m,
+                 c_units, cap_units, t):
+    """ARC REPLACE, size-aware: evict LRU of T1 (to B1) while T1 exceeds
+    the target ``p`` — or of T2 (to B2) otherwise — until ``size_m`` more
+    units fit.  ``do`` gates the whole loop (hits / oversize bypasses)."""
+    M = t1.shape[0]
+
+    def body(_, carry):
+        t1, t2, b1, b2, glast, ev = carry
+        t1u, t2u = _units(t1, c_units), _units(t2, c_units)
+        need = do & (t1u + t2u + size_m > cap_units)
+        any1, any2 = jnp.any(t1), jnp.any(t2)
+        pick1 = any1 & ((t1u > p) | (b2_hit & (t1u == p)) | ~any2)
+        v1 = jnp.argmin(jnp.where(t1, last, _I32_MAX))
+        v2 = jnp.argmin(jnp.where(t2, last, _I32_MAX))
+        do1 = need & (any1 | any2) & pick1
+        do2 = need & (any1 | any2) & ~pick1
+        t1 = jnp.where(do1, t1.at[v1].set(False), t1)
+        b1 = jnp.where(do1, b1.at[v1].set(True), b1)
+        glast = jnp.where(do1, glast.at[v1].set(t), glast)
+        ev = jnp.where(do1, ev.at[v1].set(True), ev)
+        t2 = jnp.where(do2, t2.at[v2].set(False), t2)
+        b2 = jnp.where(do2, b2.at[v2].set(True), b2)
+        glast = jnp.where(do2, glast.at[v2].set(t), glast)
+        ev = jnp.where(do2, ev.at[v2].set(True), ev)
+        return t1, t2, b1, b2, glast, ev
+
+    return jax.lax.fori_loop(
+        0, M, body, (t1, t2, b1, b2, glast, jnp.zeros((M,), jnp.bool_)))
+
+
+def arc_access(state, m, c_units, cap_units, valid=True):
+    """Adaptive Replacement Cache, scan-safe and size-aware (module
+    docstring; DESIGN.md §14).  Cases: resident hit promotes to T2; B1/B2
+    ghost hits steer ``p`` toward recency/frequency and re-admit into T2;
+    cold misses admit into T1.  Ghost-directory invariants (T1+B1 <= cap,
+    directory total <= 2*cap in size units) are restored by trimming the
+    oldest ghosts after the access."""
+    cap_units = jnp.int32(cap_units)
+    t = state["time"] + 1
+    t1, t2 = state["in_t1"], state["in_t2"]
+    b1, b2 = state["in_b1"], state["in_b2"]
+    last, glast, p = state["last"], state["glast"], state["p"]
+    size_m = c_units[m]
+    fits = size_m <= cap_units
+    hit = t1[m] | t2[m]
+    b1_hit = ~hit & b1[m]
+    b2_hit = ~hit & b2[m]
+    admit = ~hit & fits                       # ghost hits and cold misses
+    b1u, b2u = _units(b1, c_units), _units(b2, c_units)
+    # adaptation: B1 hit grows the recency target, B2 hit shrinks it
+    one = jnp.int32(1)
+    d1 = jnp.maximum(size_m, (b2u // jnp.maximum(b1u, one)) * size_m)
+    d2 = jnp.maximum(size_m, (b1u // jnp.maximum(b2u, one)) * size_m)
+    p_new = jnp.where(b1_hit, jnp.minimum(p + d1, jnp.int32(cap_units)),
+                      jnp.where(b2_hit, jnp.maximum(p - d2, 0), p))
+    t1, t2, b1, b2, glast, ev = _arc_replace(
+        t1, t2, b1, b2, last, glast, p_new, b2_hit, admit, size_m,
+        c_units, cap_units, t)
+    # resident hit: T1 -> T2 promotion (T2 hit: recency refresh only)
+    t1 = jnp.where(hit, t1.at[m].set(False), t1)
+    t2 = jnp.where(hit, t2.at[m].set(True), t2)
+    # admission: ghost hits re-enter as frequent (T2), cold misses as
+    # recent (T1); the id leaves the ghost directory
+    ghost_admit = admit & (b1_hit | b2_hit)
+    cold_admit = admit & ~(b1_hit | b2_hit)
+    b1 = jnp.where(ghost_admit, b1.at[m].set(False), b1)
+    b2 = jnp.where(ghost_admit, b2.at[m].set(False), b2)
+    t2 = jnp.where(ghost_admit, t2.at[m].set(True), t2)
+    t1 = jnp.where(cold_admit, t1.at[m].set(True), t1)
+    last = jnp.where(hit | admit, last.at[m].set(t), last)
+    # directory trims (oldest ghosts first): T1+B1 <= cap, total <= 2*cap
+    t1u = _units(t1, c_units)
+    b1, _ = _evict_oldest(b1, glast, c_units,
+                          jnp.maximum(jnp.int32(cap_units) - t1u, 0))
+    tot = t1u + _units(t2, c_units) + _units(b1, c_units)
+    b2, _ = _evict_oldest(b2, glast, c_units,
+                          jnp.maximum(jnp.int32(2 * cap_units) - tot, 0))
+    new = dict(state, in_t1=t1, in_t2=t2, in_b1=b1, in_b2=b2, last=last,
+               glast=glast, p=p_new, time=t)
+    info = {"hit": hit, "admitted": admit, "evicted": ev}
+    return _gate(valid, new, state, info)
+
+
+_ACCESS = {"lru": lru_access, "lfu": lfu_access,
+           "lru-ghost": lru_ghost_access, "arc": arc_access}
+
+
+def cache_access(kind: str, state, m, c_units, cap_units, valid=True):
+    """Dispatch one access through policy ``kind`` (jit-static string) —
+    the single place classical policy kinds are branched on."""
+    if kind not in _ACCESS:
+        raise ValueError(f"unknown cache policy {kind!r}; expected one of "
+                         f"{CACHE_POLICIES}")
+    return _ACCESS[kind](state, m, c_units, cap_units, valid)

@@ -10,6 +10,12 @@ selected once by ``allocator``/``cacher``, covering the paper's benchmarks:
   SCHRS             allocator="schrs", cacher="static"
   RCARS             allocator="rcars", cacher="random"
 
+plus the classical cache-hierarchy baselines (DESIGN.md §14):
+cacher in {"lru", "lfu", "lru-ghost", "arc"} — stateful non-learned
+cachers whose array state machine lives in the ``"cache"`` TrainState
+slot and advances once per frame on the frame's request stream
+(``Agent.step_frame``), combinable with any allocator.
+
 Vectorized training core (DESIGN.md §6): the per-episode logic lives in
 ``_episode_core`` (single env, optionally user-masked).  ``run_training``
 vmaps it over a leading batch axis of B independent edge cells — each with
@@ -46,6 +52,7 @@ from .buffers import (buffer_add, buffer_add_batch, buffer_add_many,
                       buffer_add_many_batch, buffer_add_many_stacked,
                       buffer_init, buffer_sample, buffer_sample_batch,
                       buffer_sample_stacked)
+from .cache_policies import cache_state_init
 from .d3pg import D3PGCfg, d3pg_init
 from .ddqn import DDQNCfg, ddqn_init
 from .env import (EnvCfg, EnvState, ModelParams, ScenarioSchedule,
@@ -64,8 +71,11 @@ class T2DRLCfg:
         Environment configuration (scenario transforms replace this).
     allocator : {"d3pg", "ddpg", "schrs", "rcars"}
         Short-timescale per-slot resource allocator.
-    cacher : {"ddqn", "static", "random"}
-        Long-timescale per-frame caching agent.
+    cacher : {"ddqn", "static", "random", "lru", "lfu", "lru-ghost", "arc"}
+        Long-timescale per-frame caching agent.  The last four are the
+        classical cache-hierarchy baselines (DESIGN.md §14): stateful
+        non-learned array state machines advanced per frame by the
+        request stream via ``Agent.step_frame``.
     policy : {"independent", "shared"}
         Vector-env mode (DESIGN.md §6): B independent learners vs one
         learner fed by all cells.
@@ -165,10 +175,12 @@ def t2drl_init(key, cfg: T2DRLCfg):
     """Fresh unified train-state pytree (DESIGN.md §12).
 
     The layout is FIXED regardless of method — ``{"models", "d3pg",
-    "ddqn", "ebuf", "fbuf"}`` — so vector-env squeeze/expand, checkpoints
-    (``repro.checkpoint.save_train_state``), and fleet policy export never
-    branch on agent kinds; non-learned methods simply never read their
-    (still initialized) learner slots."""
+    "ddqn", "ebuf", "fbuf", "cache"}`` — so vector-env squeeze/expand,
+    checkpoints (``repro.checkpoint.save_train_state``), and fleet policy
+    export never branch on agent kinds; non-learned methods simply never
+    read their (still initialized) learner slots.  ``"cache"`` is the
+    classical-cacher array state machine (DESIGN.md §14) — keyless init,
+    so adding it left every PRNG stream untouched."""
     km, kq, kd = jax.random.split(key, 3)
     env = cfg.env
     models = make_models(km, env)
@@ -189,6 +201,7 @@ def t2drl_init(key, cfg: T2DRLCfg):
         "ddqn": ddqn_init(kq, dq),
         "ebuf": buffer_init(d3.buffer, slot_item),
         "fbuf": buffer_init(dq.buffer, frame_item),
+        "cache": cache_state_init(M),
     }
 
 
@@ -355,6 +368,8 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
     d3 = cfg.d3pg_cfg()
     dq = cfg.ddqn_cfg()
     alloc, cacher = _agents(cfg)
+    stateful = cacher.step_frame is not None   # classical cacher (§14);
+    # python-static, so stateless methods compile the exact pre-§14 program
     models: ModelParams = ts["models"]
     cap_e = d3.buffer
     k_env, key = jax.random.split(key)
@@ -370,6 +385,8 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
 
     def frame_step(carry, xs):
         k_frame, t = xs                # t: frame index into the schedule
+        if stateful:
+            carry, cstate = carry[:-1], carry[-1]
         if alloc.learns:
             alloc_state, ebuf, env = carry
         else:
@@ -378,8 +395,8 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
         env = env_advance_frame(env, env_cfg, schedule_frame_P(mods, t),
                                 schedule_slot_mod(mods, t * env_cfg.K))
         gamma_t = env.gamma_idx
-        a_int, rho = cacher.act(ts["ddqn"], FrameObs(gamma_t, models),
-                                kf[0], step)
+        a_int, rho = cacher.act(cstate if stateful else ts["ddqn"],
+                                FrameObs(gamma_t, models), kf[0], step)
         env = env_set_cache(env, rho)
         size0 = ebuf["size"] if alloc.learns else None
 
@@ -395,7 +412,10 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
             env1, r, m = env_step_slot(env, env_cfg, models, b, xi, mask,
                                        schedule_slot_mod(mods, g + 1))
             if not alloc.learns:
-                return (env1,), slot_stats(r, m)
+                out = slot_stats(r, m)
+                # a stateful cacher needs the frame's served requests
+                # (env.req, pre-advance) replayed at frame end
+                return (env1,), ((out, env.req) if stateful else out)
             s1 = observe(env1, env_cfg, models, mask)
             item = {"s": s, "a": jnp.concatenate([b, xi]), "r": r, "s1": s1,
                     "req": env.req, "rho": env.rho, "req1": env1.req,
@@ -416,14 +436,21 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
 
         g_idx = t * env_cfg.K + jnp.arange(env_cfg.K)
         slot_keys = jax.random.split(kf[1], env_cfg.K)
+        reqs = None
         if alloc.learns:
             s = observe(env, env_cfg, models, mask)
             (alloc_state, env, _), (stats, items) = jax.lax.scan(
                 slot_step, (alloc_state, env, s), (slot_keys, g_idx))
             ebuf = buffer_add_many(ebuf, items)
+            reqs = items["req"]                           # (K, U)
+        elif stateful:
+            (env,), (stats, reqs) = jax.lax.scan(slot_step, (env,),
+                                                 (slot_keys, g_idx))
         else:
             (env,), stats = jax.lax.scan(slot_step, (env,),
                                          (slot_keys, g_idx))
+        if stateful:
+            cstate = cacher.step_frame(cstate, reqs, models, mask)
         # frame reward (32): average slot reward minus storage penalty
         # (erratum-corrected sign — see DESIGN.md §8)
         storage_viol = (jnp.sum(rho * models.c) > env_cfg.C).astype(jnp.float32)
@@ -431,14 +458,22 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
         out = {"gamma": gamma_t, "a_int": a_int, "r_frame": r_frame,
                "slot": stats, "storage_viol": storage_viol}
         carry = ((alloc_state, ebuf, env) if alloc.learns else (env,))
+        if stateful:
+            carry = carry + (cstate,)
         return carry, out
 
     frame_xs = (jax.random.split(key, env_cfg.T), jnp.arange(env_cfg.T))
+    init = ((ts["d3pg"], ts["ebuf"], env) if alloc.learns else (env,))
+    if stateful:
+        init = init + (ts["cache"],)
+    final, frames = jax.lax.scan(frame_step, init, frame_xs)
+    cache_state = final[-1] if stateful else ts["cache"]
+    if stateful:
+        final = final[:-1]
     if alloc.learns:
-        (alloc_state, ebuf, env), frames = jax.lax.scan(
-            frame_step, (ts["d3pg"], ts["ebuf"], env), frame_xs)
+        alloc_state, ebuf, env = final
     else:
-        (env,), frames = jax.lax.scan(frame_step, (env,), frame_xs)
+        (env,) = final
         alloc_state, ebuf = ts["d3pg"], ts["ebuf"]
 
     # DDQN frame transitions: (gamma_t, a_t, r_t, gamma_{t+1}) for t < T-1
@@ -474,7 +509,7 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
         "storage_viol": jnp.mean(frames["storage_viol"]),
     }
     ts = {"models": models, "d3pg": alloc_state, "ddqn": cacher_state,
-          "ebuf": ebuf, "fbuf": fbuf}
+          "ebuf": ebuf, "fbuf": fbuf, "cache": cache_state}
     return ts, stats
 
 
@@ -500,6 +535,7 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
     d3 = cfg.d3pg_cfg()
     dq = cfg.ddqn_cfg()
     alloc, cacher = _agents(cfg)
+    stateful = cacher.step_frame is not None   # classical cacher (§14)
     models: ModelParams = ts["models"]
     cap_e = d3.buffer
     B = keys.shape[0]
@@ -533,6 +569,8 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
 
     def frame_step(carry, xs):
         k_frame, t = xs                # t: frame index into the schedule
+        if stateful:
+            carry, cstate = carry[:-1], carry[-1]
         if alloc.learns:
             alloc_state, ebuf, env = carry
         else:
@@ -542,7 +580,8 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
             env, schedule_frame_P(mods, t),
             schedule_slot_mod(mods, t * env_cfg.K))
         gamma_t = env.gamma_idx                               # (B,)
-        a_int, rho = cact(ts["ddqn"], FrameObs(gamma_t, models), kf[0], step)
+        a_int, rho = cact(cstate if stateful else ts["ddqn"],
+                          FrameObs(gamma_t, models), kf[0], step)
         env = jax.vmap(env_set_cache)(env, rho)
         size0 = ebuf["size"] if alloc.learns else None        # (B,)
 
@@ -560,7 +599,8 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
                     e, env_cfg, mo, bb, xx, mk, md))(
                 env, models, b, xi, masks, schedule_slot_mod(mods, g + 1))
             if not alloc.learns:
-                return (env1,), slot_stats(r, m)
+                out = slot_stats(r, m)
+                return (env1,), ((out, env.req) if stateful else out)
             s1 = observe_b(env1)
             item = {"s": s, "a": jnp.concatenate([b, xi], axis=-1), "r": r,
                     "s1": s1, "req": env.req, "rho": env.rho,
@@ -579,6 +619,7 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
 
         g_idx = t * env_cfg.K + jnp.arange(env_cfg.K)
         slot_keys = jax.random.split(kf[1], env_cfg.K)
+        reqs = None
         if alloc.learns:
             s = observe_b(env)
             (alloc_state, env, _), (stats, items) = jax.lax.scan(
@@ -586,23 +627,38 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
             # one batched write per frame per cell: (K, B, ...) -> (B, K, ...)
             ebuf = buffer_add_many_batch(
                 ebuf, jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), items))
+            reqs = items["req"]                               # (K, B, U)
+        elif stateful:
+            (env,), (stats, reqs) = jax.lax.scan(slot_step, (env,),
+                                                 (slot_keys, g_idx))
         else:
             (env,), stats = jax.lax.scan(slot_step, (env,),
                                          (slot_keys, g_idx))
+        if stateful:
+            cstate = jax.vmap(cacher.step_frame)(
+                cstate, jnp.swapaxes(reqs, 0, 1), models, masks)
         storage_viol = (jnp.sum(rho * models.c, axis=-1)
                         > env_cfg.C).astype(jnp.float32)      # (B,)
         r_frame = jnp.mean(stats["r"], axis=0) - storage_viol * env_cfg.Xi
         out = {"gamma": gamma_t, "a_int": a_int, "r_frame": r_frame,
                "slot": stats, "storage_viol": storage_viol}
         carry = ((alloc_state, ebuf, env) if alloc.learns else (env,))
+        if stateful:
+            carry = carry + (cstate,)
         return carry, out
 
     frame_xs = (jax.random.split(key, env_cfg.T), jnp.arange(env_cfg.T))
+    init = ((ts["d3pg"], ts["ebuf"], env) if alloc.learns else (env,))
+    if stateful:
+        init = init + (ts["cache"],)
+    final, frames = jax.lax.scan(frame_step, init, frame_xs)
+    cache_state = final[-1] if stateful else ts["cache"]
+    if stateful:
+        final = final[:-1]
     if alloc.learns:
-        (alloc_state, ebuf, env), frames = jax.lax.scan(
-            frame_step, (ts["d3pg"], ts["ebuf"], env), frame_xs)
+        alloc_state, ebuf, env = final
     else:
-        (env,), frames = jax.lax.scan(frame_step, (env,), frame_xs)
+        (env,) = final
         alloc_state, ebuf = ts["d3pg"], ts["ebuf"]
 
     cacher_state, fbuf = ts["ddqn"], ts["fbuf"]
@@ -639,7 +695,7 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
         "storage_viol": jnp.mean(frames["storage_viol"], axis=0),
     }
     ts = {"models": models, "d3pg": alloc_state, "ddqn": cacher_state,
-          "ebuf": ebuf, "fbuf": fbuf}
+          "ebuf": ebuf, "fbuf": fbuf, "cache": cache_state}
     return ts, stats
 
 
@@ -693,6 +749,7 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
     alloc0, cacher0 = _agents(cfg)
     alloc = vmap_agent(alloc0, impl="fused")
     cacher = vmap_agent(cacher0, impl="fused")
+    stateful = cacher0.step_frame is not None  # classical cacher (§14)
     models: ModelParams = ts["models"]
     cap_e = d3.buffer
     B = keys.shape[0]
@@ -715,6 +772,8 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
 
     def frame_step(carry, xs):
         k_frame, t = xs               # k_frame: (B, 2); t: frame index
+        if stateful:
+            carry, cstate = carry[:-1], carry[-1]
         if alloc0.learns:
             alloc_state, ebuf, env = carry
         else:
@@ -724,8 +783,8 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
             env, schedule_frame_P(mods, t),
             schedule_slot_mod(mods, t * env_cfg.K))
         gamma_t = env.gamma_idx                           # (B,)
-        a_int, rho = cacher.act(ts["ddqn"], FrameObs(gamma_t, models),
-                                kf[:, 0], step)
+        a_int, rho = cacher.act(cstate if stateful else ts["ddqn"],
+                                FrameObs(gamma_t, models), kf[:, 0], step)
         env = jax.vmap(env_set_cache)(env, rho)
         size0 = ebuf["size"] if alloc0.learns else None   # (B,) lockstep
 
@@ -744,7 +803,7 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
                 env, models, b, xi, masks, schedule_slot_mod(mods, g + 1))
             st = slot_stats(r, m)
             if not alloc0.learns:
-                return (env1,), st
+                return (env1,), ((st, env.req) if stateful else st)
             s1 = observe_b(env1)
             r_store = r if shape_hit is None else r + shape_hit * st["hit"]
             item = {"s": s, "a": jnp.concatenate([b, xi], axis=-1),
@@ -769,6 +828,7 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
         slot_keys = jnp.moveaxis(
             jax.vmap(lambda k: jax.random.split(k, env_cfg.K))(kf[:, 1]),
             1, 0)                                         # (K, B, 2)
+        reqs = None
         if alloc0.learns:
             s = observe_b(env)
             (alloc_state, env, _), (stats, items) = jax.lax.scan(
@@ -776,9 +836,16 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
             # one fused write per frame: (K, B, ...) -> (B, K, ...)
             ebuf = buffer_add_many_stacked(
                 ebuf, jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), items))
+            reqs = items["req"]                           # (K, B, U)
+        elif stateful:
+            (env,), (stats, reqs) = jax.lax.scan(slot_step, (env,),
+                                                 (slot_keys, g_idx))
         else:
             (env,), stats = jax.lax.scan(slot_step, (env,),
                                          (slot_keys, g_idx))
+        if stateful:
+            cstate = jax.vmap(cacher0.step_frame)(
+                cstate, jnp.swapaxes(reqs, 0, 1), models, masks)
         storage_viol = (jnp.sum(rho * models.c, axis=-1)
                         > env_cfg.C).astype(jnp.float32)  # (B,)
         r_frame = jnp.mean(stats["r"], axis=0) - storage_viol * env_cfg.Xi
@@ -787,16 +854,24 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
         out = {"gamma": gamma_t, "a_int": a_int, "r_frame": r_frame,
                "slot": stats, "storage_viol": storage_viol}
         carry = ((alloc_state, ebuf, env) if alloc0.learns else (env,))
+        if stateful:
+            carry = carry + (cstate,)
         return carry, out
 
     frame_keys = jnp.moveaxis(
         jax.vmap(lambda k: jax.random.split(k, env_cfg.T))(keyd), 1, 0)
     frame_xs = (frame_keys, jnp.arange(env_cfg.T))
+    init = ((ts["d3pg"], ts["ebuf"], env) if alloc0.learns else (env,))
+    if stateful:
+        init = init + (ts["cache"],)
+    final, frames = jax.lax.scan(frame_step, init, frame_xs)
+    cache_state = final[-1] if stateful else ts["cache"]
+    if stateful:
+        final = final[:-1]
     if alloc0.learns:
-        (alloc_state, ebuf, env), frames = jax.lax.scan(
-            frame_step, (ts["d3pg"], ts["ebuf"], env), frame_xs)
+        alloc_state, ebuf, env = final
     else:
-        (env,), frames = jax.lax.scan(frame_step, (env,), frame_xs)
+        (env,) = final
         alloc_state, ebuf = ts["d3pg"], ts["ebuf"]
 
     cacher_state, fbuf = ts["ddqn"], ts["fbuf"]
@@ -834,7 +909,7 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
         "storage_viol": jnp.mean(frames["storage_viol"], axis=0),
     }
     ts = {"models": models, "d3pg": alloc_state, "ddqn": cacher_state,
-          "ebuf": ebuf, "fbuf": fbuf}
+          "ebuf": ebuf, "fbuf": fbuf, "cache": cache_state}
     return ts, stats
 
 
@@ -1136,7 +1211,9 @@ def run_eval(ts, cfg: T2DRLCfg, key, ep_idx, masks=None, mods=None):
     return stats
 
 
-_ENV_AXIS_KEYS = ("models", "ebuf", "fbuf")   # always batched in batch mode
+_ENV_AXIS_KEYS = ("models", "ebuf", "fbuf", "cache")  # always batched in
+#                         batch mode (cache state is per-cell even when the
+#                         learner parameters are shared, DESIGN.md §14)
 
 
 def _squeeze_env_axis(ts, cfg: T2DRLCfg):
@@ -1320,7 +1397,9 @@ def export_policy(ts, cfg: T2DRLCfg, cell: int = 0):
     -------
     dict
         ``{"actor": ..., "ddqn": {"q": ...}}`` with keys present only for
-        the learned components of ``cfg`` (empty dict for RCARS/SCHRS).
+        the learned components of ``cfg`` (empty dict for RCARS/SCHRS);
+        classical cachers (DESIGN.md §14) export ``{"cache": {"rho":
+        ...}}`` — the frozen resident set the twin serves greedily.
         Model zoos are *not* included — they are environment state, passed
         to the twin separately.
     """
@@ -1333,6 +1412,12 @@ def export_policy(ts, cfg: T2DRLCfg, cell: int = 0):
         pol.update(alloc.export(take(ts["d3pg"])))
     if cacher.learns:
         pol.update(cacher.export(take(ts["ddqn"])))
+    elif cacher.step_frame is not None:
+        # cache state is per-cell even in shared mode (_ENV_AXIS_KEYS),
+        # so slice on the models axis, not the agent axis
+        take_cell = ((lambda x: jax.tree.map(lambda v: v[cell], x))
+                     if ts["models"].a1.ndim == 2 else (lambda x: x))
+        pol.update(cacher.export(take_cell(ts["cache"])))
     return pol
 
 

@@ -1,0 +1,209 @@
+"""Pure-Python reference implementations of the classical cache policies.
+
+Operation-for-operation mirrors of ``repro.core.cache_policies`` (seeded
+from the dict-based ARCache idiom in SNIPPETS.md #1, re-expressed over the
+fixed model universe): plain lists/ints, sequential loops, NO jax — the
+independent oracle the differential harness (``tests/test_cachers.py``)
+drives in lockstep with the jitted state machines.  All arithmetic is
+integer (size units), so agreement is exact, not approximate: every
+``access`` must produce the same ``hit``/``admitted``/``evicted`` trace
+and the same resident set as the jitted ``cache_access``.
+
+Tie-break contract (DESIGN.md §14): eviction victims minimize
+``(score, index)`` — the Python ``min`` over tuples mirrors jax's
+argmin-first-occurrence over a masked score array.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _RefBase:
+    """Shared state layout: membership sets as bool arrays over the M model
+    ids, timestamp/frequency arrays, a logical clock — exactly the
+    ``cache_state_init`` leaves."""
+
+    def __init__(self, M, c_units, cap_units):
+        self.M = int(M)
+        self.cu = [int(c) for c in c_units]
+        self.cap = int(cap_units)
+        self.in_t1 = np.zeros(M, bool)
+        self.in_t2 = np.zeros(M, bool)
+        self.in_b1 = np.zeros(M, bool)
+        self.in_b2 = np.zeros(M, bool)
+        self.last = np.full(M, -1, np.int64)
+        self.glast = np.full(M, -1, np.int64)
+        self.freq = np.zeros(M, np.int64)
+        self.time = 0
+        self.p = 0
+
+    def rho(self):
+        return (self.in_t1 | self.in_t2).astype(np.float32)
+
+    def _units(self, members):
+        return sum(self.cu[i] for i in range(self.M) if members[i])
+
+    def _evict_oldest(self, members, order, budget, evicted=None):
+        """Evict lowest-(order, index) members until they fit ``budget``."""
+        for _ in range(self.M):
+            if self._units(members) <= budget or not members.any():
+                break
+            v = min((i for i in range(self.M) if members[i]),
+                    key=lambda i: (order[i], i))
+            members[v] = False
+            if evicted is not None:
+                evicted[v] = True
+
+    def _noop(self):
+        return {"hit": False, "admitted": False,
+                "evicted": np.zeros(self.M, bool)}
+
+
+class RefLRU(_RefBase):
+    def access(self, m, valid=True):
+        if not valid:
+            return self._noop()
+        self.time += 1
+        hit = bool(self.in_t1[m])
+        fits = self.cu[m] <= self.cap
+        admit = (not hit) and fits
+        ev = np.zeros(self.M, bool)
+        if admit:
+            self._evict_oldest(self.in_t1, self.last,
+                               self.cap - self.cu[m], ev)
+            self.in_t1[m] = True
+        if hit or admit:
+            self.last[m] = self.time
+        return {"hit": hit, "admitted": admit, "evicted": ev}
+
+
+class RefLFU(_RefBase):
+    def _evict_lfu(self, budget, ev):
+        for _ in range(self.M):
+            if self._units(self.in_t1) <= budget or not self.in_t1.any():
+                break
+            fmin = min(self.freq[i] for i in range(self.M) if self.in_t1[i])
+            v = min((i for i in range(self.M)
+                     if self.in_t1[i] and self.freq[i] == fmin),
+                    key=lambda i: (self.last[i], i))
+            self.in_t1[v] = False
+            self.freq[v] = 0
+            ev[v] = True
+
+    def access(self, m, valid=True):
+        if not valid:
+            return self._noop()
+        self.time += 1
+        hit = bool(self.in_t1[m])
+        fits = self.cu[m] <= self.cap
+        admit = (not hit) and fits
+        ev = np.zeros(self.M, bool)
+        if hit:
+            self.freq[m] += 1
+        elif admit:
+            self._evict_lfu(self.cap - self.cu[m], ev)
+            self.in_t1[m] = True
+            self.freq[m] = 1
+        if hit or admit:
+            self.last[m] = self.time
+        return {"hit": hit, "admitted": admit, "evicted": ev}
+
+
+class RefLRUGhost(_RefBase):
+    """Admission-filtered LRU: ghost list as doorkeeper (cache list in
+    ``in_t1``, ghost list in ``in_b1``)."""
+
+    def access(self, m, valid=True):
+        if not valid:
+            return self._noop()
+        self.time += 1
+        hit = bool(self.in_t1[m])
+        fits = self.cu[m] <= self.cap
+        ghost_hit = (not hit) and bool(self.in_b1[m])
+        admit = ghost_hit and fits
+        record = (not hit) and not ghost_hit
+        ev = np.zeros(self.M, bool)
+        if admit:
+            self._evict_oldest(self.in_t1, self.last,
+                               self.cap - self.cu[m], ev)
+            self.in_t1[m] = True
+            self.in_b1[m] = False
+        if hit or admit:
+            self.last[m] = self.time
+        for v in range(self.M):
+            if ev[v]:
+                self.in_b1[v] = True
+                self.glast[v] = self.time
+        if record:
+            self.in_b1[m] = True
+            self.glast[m] = self.time
+        self._evict_oldest(self.in_b1, self.glast, self.cap)
+        return {"hit": hit, "admitted": admit, "evicted": ev}
+
+
+class RefARC(_RefBase):
+    """Scan-safe, size-aware ARC (DESIGN.md §14): every cache eviction
+    ghosts, the directory invariants (T1+B1 <= cap, total <= 2*cap, in
+    size units) are restored by post-hoc oldest-ghost trims."""
+
+    def access(self, m, valid=True):
+        if not valid:
+            return self._noop()
+        self.time += 1
+        t = self.time
+        size_m = self.cu[m]
+        fits = size_m <= self.cap
+        hit = bool(self.in_t1[m] or self.in_t2[m])
+        b1_hit = (not hit) and bool(self.in_b1[m])
+        b2_hit = (not hit) and bool(self.in_b2[m])
+        admit = (not hit) and fits
+        b1u, b2u = self._units(self.in_b1), self._units(self.in_b2)
+        if b1_hit:
+            d1 = max(size_m, (b2u // max(b1u, 1)) * size_m)
+            self.p = min(self.p + d1, self.cap)
+        elif b2_hit:
+            d2 = max(size_m, (b1u // max(b2u, 1)) * size_m)
+            self.p = max(self.p - d2, 0)
+        ev = np.zeros(self.M, bool)
+        if admit:                                  # REPLACE
+            for _ in range(self.M):
+                t1u = self._units(self.in_t1)
+                t2u = self._units(self.in_t2)
+                if t1u + t2u + size_m <= self.cap:
+                    break
+                any1, any2 = self.in_t1.any(), self.in_t2.any()
+                if not (any1 or any2):
+                    break
+                pick1 = any1 and ((t1u > self.p)
+                                  or (b2_hit and t1u == self.p)
+                                  or not any2)
+                src, dst = ((self.in_t1, self.in_b1) if pick1
+                            else (self.in_t2, self.in_b2))
+                v = min((i for i in range(self.M) if src[i]),
+                        key=lambda i: (self.last[i], i))
+                src[v] = False
+                dst[v] = True
+                self.glast[v] = t
+                ev[v] = True
+        if hit:                                    # T1 -> T2 promotion
+            self.in_t1[m] = False
+            self.in_t2[m] = True
+        elif admit:
+            if b1_hit or b2_hit:                   # ghost hit -> frequent
+                self.in_b1[m] = False
+                self.in_b2[m] = False
+                self.in_t2[m] = True
+            else:                                  # cold miss -> recent
+                self.in_t1[m] = True
+        if hit or admit:
+            self.last[m] = t
+        t1u = self._units(self.in_t1)
+        self._evict_oldest(self.in_b1, self.glast, max(self.cap - t1u, 0))
+        tot = (t1u + self._units(self.in_t2) + self._units(self.in_b1))
+        self._evict_oldest(self.in_b2, self.glast,
+                           max(2 * self.cap - tot, 0))
+        return {"hit": hit, "admitted": admit, "evicted": ev}
+
+
+CACHE_REFS = {"lru": RefLRU, "lfu": RefLFU, "lru-ghost": RefLRUGhost,
+              "arc": RefARC}

@@ -1,3 +1,4 @@
+import inspect
 import sys
 import types
 
@@ -12,30 +13,78 @@ import pytest
 # -- hypothesis shim ----------------------------------------------------------
 #
 # The property tests use a small slice of hypothesis (given / settings /
-# st.integers / st.floats).  When the real package is missing (it is not in
-# the base container image), install a deterministic stand-in BEFORE the test
-# modules import it: each @given test runs against the range endpoints plus
-# seeded uniform draws.  With hypothesis installed (see requirements.txt),
-# the real shrinking engine is used instead.
+# st.integers / st.floats / st.lists / st.sampled_from / st.composite).
+# When the real package is missing (it is not in the base container image),
+# install a deterministic stand-in BEFORE the test modules import it: each
+# @given test runs against the strategies' boundary values plus seeded
+# uniform draws — same cases in every run, so stub-vs-real collection only
+# changes the engine, never which tests exist.  With hypothesis installed
+# (see requirements.txt), the real shrinking engine is used instead.
 
 def _install_hypothesis_stub():
     class _Strategy:
-        def __init__(self, lo, hi, draw):
-            self.lo, self.hi, self.draw = lo, hi, draw
+        def __init__(self, boundaries, draw):
+            self.boundaries, self.draw = list(boundaries), draw
 
         def examples(self, rng, n):
-            out = [self.lo, self.hi]
-            out += [self.draw(rng) for _ in range(max(n - 2, 0))]
+            out = list(self.boundaries)
+            out += [self.draw(rng) for _ in range(max(n - len(out), 0))]
             return out[:max(n, 1)]
 
+    def _integers(lo, hi):
+        return _Strategy(
+            [lo, hi],
+            lambda rng: int(rng.randint(lo, hi)) if hi > lo else lo)
+
+    def _floats(lo, hi):
+        return _Strategy([float(lo), float(hi)],
+                         lambda rng: float(rng.uniform(lo, hi)))
+
+    def _lists(elem, min_size=0, max_size=None):
+        if max_size is None:
+            raise ValueError("stub st.lists requires an explicit max_size")
+
+        def draw(rng):
+            n = int(rng.randint(min_size, max_size)) \
+                if max_size > min_size else min_size
+            return [elem.draw(rng) for _ in range(n)]
+
+        lo = [elem.boundaries[0]] * min_size
+        hi = [elem.boundaries[-1]] * max_size
+        return _Strategy([lo, hi], draw)
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy([seq[0], seq[-1]],
+                         lambda rng: seq[int(rng.randint(0, len(seq)))])
+
+    def _composite(fn):
+        # real-hypothesis contract: fn's first arg is a draw callable;
+        # @st.composite returns a factory whose calls return a strategy
+        def factory(*args, **kwargs):
+            return _Strategy(
+                [fn(lambda s: s.boundaries[0], *args, **kwargs),
+                 fn(lambda s: s.boundaries[-1], *args, **kwargs)],
+                lambda rng: fn(lambda s: s.draw(rng), *args, **kwargs))
+        factory.__name__ = fn.__name__
+        return factory
+
     st_mod = types.ModuleType("hypothesis.strategies")
-    st_mod.integers = lambda lo, hi: _Strategy(
-        lo, hi, lambda rng: int(rng.randint(lo, hi)) if hi > lo else lo)
-    st_mod.floats = lambda lo, hi: _Strategy(
-        float(lo), float(hi), lambda rng: float(rng.uniform(lo, hi)))
+    st_mod.integers = _integers
+    st_mod.floats = _floats
+    st_mod.lists = _lists
+    st_mod.sampled_from = _sampled_from
+    st_mod.composite = _composite
 
     def given(*strats):
         def deco(fn):
+            # like real hypothesis, positional strategies fill the test
+            # function's RIGHTMOST parameters; any leading ones (pytest
+            # parametrize/fixtures) stay visible through __signature__
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            strat_names = names[len(names) - len(strats):]
+
             # NB: no functools.wraps — pytest would follow __wrapped__ to
             # the original signature and demand fixtures for the params.
             def wrapper(*args, **kwargs):
@@ -43,9 +92,12 @@ def _install_hypothesis_stub():
                 rng = np.random.RandomState(0)
                 cases = zip(*(s.examples(rng, n) for s in strats))
                 for case in cases:
-                    fn(*args, *case, **kwargs)
+                    fn(*args, **kwargs, **dict(zip(strat_names, case)))
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
+            wrapper.__signature__ = sig.replace(
+                parameters=[sig.parameters[n] for n in names
+                            if n not in strat_names])
             wrapper._stub_inner = fn
             return wrapper
         return deco

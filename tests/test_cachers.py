@@ -1,0 +1,410 @@
+"""Classical cache-hierarchy baselines (DESIGN.md §14): differential tests
+against the pure-Python references plus property-based invariants.
+
+The load-bearing contract: every jitted policy in
+``repro.core.cache_policies`` must be TRACE-IDENTICAL to its reference in
+``tests/_cache_refs.py`` — same hit/admitted/evicted decisions and same
+resident set after every access, on randomized request/eviction streams
+(sizes, capacities, invalid-access gaps all randomized).  All capacity
+arithmetic is integer (size units), so the comparison is exact equality,
+never approximate.
+
+Shapes are held fixed within each sweep (M, stream length) so every policy
+compiles exactly once; sizes/capacities ride as traced inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.agents import make_cacher
+from repro.agents.base import FrameObs
+from repro.core import (CACHE_POLICIES, EnvCfg, T2DRLCfg, cache_access,
+                        cache_rho, cache_state_init, eval_t2drl,
+                        export_policy, quantize_capacity, quantize_sizes,
+                        train_t2drl)
+from repro.core.t2drl import _agents
+
+# -- harness ------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_trace(kind, c_units, cap_units, stream, valid):
+    """Scan one request stream through a policy; returns the full decision
+    trace (hit/admitted/evicted per access) and per-access resident sets."""
+    def one(st_, mx):
+        m, v = mx
+        st_, info = cache_access(kind, st_, m, c_units, cap_units, v)
+        return st_, (info, cache_rho(st_))
+
+    state = cache_state_init(c_units.shape[0])
+    state, (infos, rhos) = jax.lax.scan(one, state, (stream, valid))
+    return state, infos, rhos
+
+
+def _ref_trace(kind, c_units, cap_units, stream, valid):
+    from _cache_refs import CACHE_REFS
+    ref = CACHE_REFS[kind](len(c_units), c_units, cap_units)
+    infos, rhos = [], []
+    for m, v in zip(stream, valid):
+        infos.append(ref.access(int(m), bool(v)))
+        rhos.append(ref.rho())
+    return ref, infos, rhos
+
+
+def _random_case(seed, M, length):
+    """One randomized request/eviction stream: item sizes, capacity, the
+    request sequence, and invalid-access gaps (masked users)."""
+    rng = np.random.default_rng(seed)
+    c_units = rng.integers(64, 400, size=M).astype(np.int32)
+    # capacity from ~1 item to most of the zoo; occasionally smaller than
+    # the largest item (oversize-bypass coverage)
+    cap = int(rng.integers(96, max(int(c_units.sum()), 97)))
+    stream = rng.integers(0, M, size=length).astype(np.int32)
+    valid = (rng.random(length) > 0.15)
+    return c_units, cap, stream, valid
+
+
+def _assert_trace_equal(kind, c_units, cap, stream, valid):
+    state, infos, rhos = _run_trace(kind, jnp.asarray(c_units),
+                                    jnp.int32(cap), jnp.asarray(stream),
+                                    jnp.asarray(valid))
+    ref, ref_infos, ref_rhos = _ref_trace(kind, c_units, cap, stream, valid)
+    hits = np.asarray(infos["hit"])
+    admits = np.asarray(infos["admitted"])
+    evs = np.asarray(infos["evicted"])
+    for i in range(len(stream)):
+        assert bool(hits[i]) == ref_infos[i]["hit"], (kind, i)
+        assert bool(admits[i]) == ref_infos[i]["admitted"], (kind, i)
+        np.testing.assert_array_equal(evs[i], ref_infos[i]["evicted"],
+                                      err_msg=f"{kind} access {i}")
+        np.testing.assert_array_equal(np.asarray(rhos)[i], ref_rhos[i],
+                                      err_msg=f"{kind} access {i}")
+    # terminal state agrees leaf for leaf
+    for leaf in ("in_t1", "in_t2", "in_b1", "in_b2", "freq"):
+        np.testing.assert_array_equal(np.asarray(state[leaf]),
+                                      getattr(ref, leaf), err_msg=kind)
+    assert int(state["p"]) == ref.p
+    return state, ref
+
+
+# -- differential: jit vs Python reference ------------------------------------
+
+
+@pytest.mark.parametrize("kind", CACHE_POLICIES)
+def test_differential_traces(kind):
+    """Trace identity on randomized streams (quick sweep, fixed shapes)."""
+    for seed in range(12):
+        c_units, cap, stream, valid = _random_case(seed, M=6, length=96)
+        _assert_trace_equal(kind, c_units, cap, stream, valid)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", CACHE_POLICIES)
+def test_differential_traces_bulk(kind):
+    """>= 1000 randomized streams across the four policies (250 each);
+    M and stream length fixed so each policy compiles once."""
+    for seed in range(250):
+        c_units, cap, stream, valid = _random_case(1_000 + seed,
+                                                   M=8, length=128)
+        _assert_trace_equal(kind, c_units, cap, stream, valid)
+
+
+@pytest.mark.parametrize("kind", CACHE_POLICIES)
+def test_differential_batched_b4(kind):
+    """B=4 vmapped streams bit-match four independent references."""
+    cases = [_random_case(40 + i, M=6, length=64) for i in range(4)]
+    cu = jnp.stack([jnp.asarray(c) for c, _, _, _ in cases])
+    cap = jnp.asarray([c for _, c, _, _ in cases], jnp.int32)
+    streams = jnp.stack([jnp.asarray(s) for _, _, s, _ in cases])
+    valids = jnp.stack([jnp.asarray(v) for _, _, _, v in cases])
+    state, infos, rhos = jax.vmap(
+        lambda c, k, s, v: _run_trace(kind, c, k, s, v))(
+        cu, cap, streams, valids)
+    for b, (c_units, cap_b, stream, valid) in enumerate(cases):
+        ref, ref_infos, ref_rhos = _ref_trace(kind, c_units, cap_b,
+                                              stream, valid)
+        np.testing.assert_array_equal(
+            np.asarray(infos["hit"][b]),
+            np.array([i["hit"] for i in ref_infos]), err_msg=f"{kind} b{b}")
+        np.testing.assert_array_equal(np.asarray(rhos[b][-1]), ref.rho(),
+                                      err_msg=f"{kind} b{b}")
+        for leaf in ("in_t1", "in_t2", "in_b1", "in_b2"):
+            np.testing.assert_array_equal(np.asarray(state[leaf][b]),
+                                          getattr(ref, leaf),
+                                          err_msg=f"{kind} b{b}")
+
+
+# -- property-based invariants ------------------------------------------------
+
+
+@st.composite
+def _stream_case(draw):
+    """Hypothesis-generated request/eviction stream: zoo size, seed for
+    sizes/capacity, and an explicit request list."""
+    M = draw(st.integers(4, 8))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    reqs = draw(st.lists(st.integers(0, M - 1), min_size=1, max_size=48))
+    return M, seed, reqs
+
+
+def _case_arrays(M, seed, reqs):
+    rng = np.random.default_rng(seed)
+    c_units = rng.integers(64, 400, size=M).astype(np.int32)
+    cap = int(rng.integers(96, max(int(c_units.sum()), 97)))
+    stream = np.asarray(reqs, np.int32)
+    valid = (rng.random(len(reqs)) > 0.1)
+    return c_units, cap, stream, valid
+
+
+@pytest.mark.parametrize("kind", CACHE_POLICIES)
+@given(_stream_case())
+@settings(max_examples=15, deadline=None)
+def test_invariants(kind, case):
+    """Capacity never exceeded, lists disjoint and bounded, p in range,
+    decision flags consistent — after EVERY access of the stream."""
+    M, seed, reqs = case
+    c_units, cap, stream, valid = _case_arrays(M, seed, reqs)
+    state, infos, rhos = _run_trace(kind, jnp.asarray(c_units),
+                                    jnp.int32(cap), jnp.asarray(stream),
+                                    jnp.asarray(valid))
+    hit = np.asarray(infos["hit"])
+    admit = np.asarray(infos["admitted"])
+    ev = np.asarray(infos["evicted"])
+    rhos = np.asarray(rhos)
+    cu = np.asarray(c_units)
+    for i in range(len(stream)):
+        # capacity invariant, in exact integer units
+        assert int((rhos[i] * cu).sum()) <= cap, (kind, i)
+        # decisions only on valid accesses; hit and admit are exclusive
+        if not valid[i]:
+            assert not hit[i] and not admit[i] and not ev[i].any()
+        assert not (hit[i] and admit[i])
+        # evictions only happen to make room for an admission
+        if ev[i].any():
+            assert admit[i], (kind, i)
+    # terminal structural invariants
+    t1m, t2m = np.asarray(state["in_t1"]), np.asarray(state["in_t2"])
+    b1m, b2m = np.asarray(state["in_b1"]), np.asarray(state["in_b2"])
+    assert not (t1m & t2m).any()
+    assert not ((t1m | t2m) & (b1m | b2m)).any()
+    if kind == "arc":
+        assert not (b1m & b2m).any()
+        t1u, b1u = int(cu[t1m].sum()), int(cu[b1m].sum())
+        assert t1u + b1u <= cap, "ARC: T1+B1 exceeds c"
+        total = t1u + int(cu[t2m].sum()) + b1u + int(cu[b2m].sum())
+        assert total <= 2 * cap, "ARC: directory exceeds 2c"
+        assert 0 <= int(state["p"]) <= cap
+    if kind == "lru-ghost":
+        assert int(cu[b1m].sum()) <= cap, "ghost list exceeds capacity"
+
+
+@pytest.mark.parametrize("kind", CACHE_POLICIES)
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_hit_count_conservation(kind, seed):
+    """Every valid access is exactly one of {hit, admitted, rejected};
+    rejections only for misses that were filtered or can never fit."""
+    c_units, cap, stream, valid = _random_case(seed, M=6, length=96)
+    _, infos, _ = _run_trace(kind, jnp.asarray(c_units), jnp.int32(cap),
+                             jnp.asarray(stream), jnp.asarray(valid))
+    hit = np.asarray(infos["hit"])
+    admit = np.asarray(infos["admitted"])
+    n_valid = int(valid.sum())
+    assert int(hit.sum()) + int((~hit & valid).sum()) == n_valid
+    assert int((hit & admit).sum()) == 0
+    # the ledger: hits + admissions + rejections partition valid accesses
+    rejected = valid & ~hit & ~admit
+    assert int(hit.sum() + admit.sum() + rejected.sum()) == n_valid
+    if kind in ("lru", "lfu", "arc"):
+        # non-filtered policies reject only items larger than the cache
+        oversize = np.asarray(c_units)[stream] > cap
+        np.testing.assert_array_equal(rejected, valid & ~hit & oversize)
+
+
+@pytest.mark.parametrize("kind", CACHE_POLICIES)
+def test_eviction_determinism(kind):
+    """The same stream replayed twice produces identical traces and state
+    (no hidden key/threading dependence)."""
+    c_units, cap, stream, valid = _random_case(7, M=6, length=80)
+    s1, i1, r1 = _run_trace(kind, jnp.asarray(c_units), jnp.int32(cap),
+                            jnp.asarray(stream), jnp.asarray(valid))
+    s2, i2, r2 = _run_trace(kind, jnp.asarray(c_units), jnp.int32(cap),
+                            jnp.asarray(stream), jnp.asarray(valid))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), (s1, i1, r1), (s2, i2, r2))
+
+
+def test_invalid_access_is_noop():
+    """valid=False leaves every state leaf untouched (the masked-user
+    lever the frame replay relies on)."""
+    c_units = jnp.asarray([100, 200, 150, 120], jnp.int32)
+    for kind in CACHE_POLICIES:
+        state = cache_state_init(4)
+        state, _ = cache_access(kind, state, jnp.int32(1), c_units, 400,
+                                jnp.bool_(True))
+        after, info = cache_access(kind, state, jnp.int32(2), c_units, 400,
+                                   jnp.bool_(False))
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), state, after)
+        assert not bool(info["hit"]) and not bool(info["admitted"])
+
+
+def test_quantization_is_conservative():
+    """ceil(sizes) + floor(capacity) implies unit-feasible => GB-feasible,
+    so classical cachers can never trip the storage penalty (11d)."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        c = rng.uniform(2.0, 10.0, size=8).astype(np.float32)
+        C = float(rng.uniform(6.0, 40.0))
+        cu = np.asarray(quantize_sizes(jnp.asarray(c)))
+        cap = quantize_capacity(C)
+        # any subset feasible in units is feasible in GB
+        sub = rng.random(8) < 0.5
+        if int(cu[sub].sum()) <= cap:
+            assert float(c[sub].sum()) <= C + 1e-6
+
+
+# -- agent protocol + driver integration --------------------------------------
+
+_ENV = EnvCfg(U=6, M=8, T=5, K=6)
+
+
+def _cfg(cacher, **kw):
+    return T2DRLCfg(env=_ENV, allocator="rcars", cacher=cacher, episodes=2,
+                    seed=0, **kw)
+
+
+def test_make_cacher_dispatch():
+    from repro.core.ddqn import DDQNCfg
+    dq = DDQNCfg(M=_ENV.M, J=len(_ENV.gammas))
+    for kind in CACHE_POLICIES:
+        agent = make_cacher(kind, dq, _ENV)
+        assert agent.name == kind
+        assert not agent.learns
+        assert agent.step_frame is not None
+    with pytest.raises(ValueError, match="unknown cacher"):
+        make_cacher("mru", dq, _ENV)
+
+
+def test_act_is_batch_transparent():
+    """One act call on (B, ...) stacked cache state equals the vmapped
+    per-cell act — the lockstep shared-mode contract."""
+    from repro.core.env import make_models
+    _, cacher = _agents(_cfg("arc"))
+    key = jax.random.PRNGKey(0)
+    state_b = jax.vmap(cacher.init)(jax.random.split(key, 3))
+    state_b = {**state_b, "in_t1": jnp.asarray(
+        [[1, 0, 0, 0, 0, 0, 0, 0], [0, 1, 1, 0, 0, 0, 0, 0],
+         [0] * 8], jnp.bool_)}
+    models = jax.vmap(lambda k: make_models(k, _ENV))(
+        jax.random.split(key, 3))
+    obs = FrameObs(jnp.asarray([0, 1, 0]), models)
+    step = {"eps": jnp.float32(0.0)}
+    a_b, rho_b = cacher.act(state_b, obs, key, step)
+    a_v, rho_v = jax.vmap(cacher.act, in_axes=(0, 0, None, None))(
+        state_b, obs, key, step)
+    np.testing.assert_array_equal(np.asarray(a_b), np.asarray(a_v))
+    np.testing.assert_array_equal(np.asarray(rho_b), np.asarray(rho_v))
+
+
+def test_step_frame_matches_flat_stream():
+    """Agent.step_frame over a (K, U) request matrix == sequential
+    cache_access over the row-major flattened stream, with masked users
+    replayed as no-ops."""
+    from repro.core.env import make_models
+    _, cacher = _agents(_cfg("lru"))
+    key = jax.random.PRNGKey(3)
+    models = make_models(key, _ENV)
+    reqs = jax.random.randint(key, (_ENV.K, _ENV.U), 0, _ENV.M)
+    mask = jnp.asarray([1, 1, 0, 1, 0, 1], jnp.float32)
+    state = cacher.step_frame(cacher.init(key), reqs, models, mask)
+    cu = quantize_sizes(models.c)
+    cap = quantize_capacity(_ENV.C)
+    ref = cache_state_init(_ENV.M)
+    for k in range(_ENV.K):
+        for u in range(_ENV.U):
+            ref, _ = cache_access("lru", ref, reqs[k, u], cu, cap,
+                                  mask[u] > 0)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state, ref)
+
+
+def test_export_greedy_roundtrip():
+    """export -> greedy returns exactly the frozen resident set."""
+    _, cacher = _agents(_cfg("arc"))
+    key = jax.random.PRNGKey(0)
+    state = cache_state_init(_ENV.M)
+    state = {**state,
+             "in_t1": jnp.asarray([1, 0, 1, 0, 0, 0, 0, 0], jnp.bool_),
+             "in_t2": jnp.asarray([0, 0, 0, 0, 1, 0, 0, 0], jnp.bool_)}
+    pol = cacher.export(state)
+    rho = cacher.greedy(pol, None, key)
+    np.testing.assert_array_equal(np.asarray(rho),
+                                  np.asarray(cache_rho(state)))
+
+
+@pytest.mark.parametrize("kind", CACHE_POLICIES)
+def test_train_single_env(kind):
+    """B=1 driver run: state machine evolves, zero storage violations
+    (the quantization guarantee), finite stats."""
+    ts, hist = train_t2drl(_cfg(kind), episodes=2)
+    assert float(jnp.max(hist["storage_viol"])) == 0.0
+    assert bool(jnp.any(ts["cache"]["in_t1"] | ts["cache"]["in_t2"]))
+    assert int(ts["cache"]["time"]) == 2 * _ENV.T * _ENV.K * _ENV.U
+    for v in hist.values():
+        assert bool(jnp.all(jnp.isfinite(v)))
+    pol = export_policy(ts, _cfg(kind))
+    assert set(pol) == {"cache"}
+    ev = eval_t2drl(ts, _cfg(kind), episodes=1)
+    assert 0.0 <= float(ev["hit_ratio"]) <= 1.0
+
+
+def test_fused_vs_vmap_bit_identical():
+    """B=4 independent cells: the fused episode program and the legacy
+    vmap program agree — cache state machines (all-integer) bit-for-bit,
+    float stat aggregates to XLA codegen round-off only (the §13 episode
+    round-off contract; the underlying decisions are discrete)."""
+    out = {}
+    for impl in ("fused", "vmap"):
+        cfg = _cfg("arc", independent_impl=impl)
+        ts, hist = train_t2drl(cfg, episodes=2, num_envs=4)
+        out[impl] = (ts["cache"], hist)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), out["fused"][0], out["vmap"][0])
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6),
+        out["fused"][1], out["vmap"][1])
+    # the discrete decision trace is exact: identical per-cell hit COUNTS
+    n_req = _ENV.T * _ENV.K * _ENV.U
+    np.testing.assert_array_equal(
+        np.round(np.asarray(out["fused"][1]["hit_ratio"]) * n_req),
+        np.round(np.asarray(out["vmap"][1]["hit_ratio"]) * n_req))
+
+
+def test_shared_mode_cache_is_per_cell():
+    """Shared-learner mode still gives every cell its own cache state
+    (cache rides _ENV_AXIS_KEYS, not the shared-agent squeeze)."""
+    cfg = _cfg("arc", policy="shared")
+    ts, hist = train_t2drl(cfg, episodes=2, num_envs=2)
+    assert ts["cache"]["in_t1"].shape == (2, _ENV.M)
+    assert float(jnp.max(hist["storage_viol"])) == 0.0
+    # heterogeneous zoos + independent streams -> cells may diverge; at
+    # minimum both evolved
+    assert bool(jnp.all(ts["cache"]["time"] > 0))
+
+
+def test_masked_users_reduce_accesses():
+    """Driver-level mask handling: inactive users are replayed as no-op
+    accesses — the cache clock counts exactly the valid requests."""
+    cfg = _cfg("lru")
+    ts_full, _ = train_t2drl(cfg, episodes=1)
+    assert int(ts_full["cache"]["time"]) == _ENV.T * _ENV.K * _ENV.U
+    ts_masked, _ = train_t2drl(cfg, episodes=1, num_envs=1, user_counts=[4])
+    assert int(ts_masked["cache"]["time"]) == _ENV.T * _ENV.K * 4

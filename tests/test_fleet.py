@@ -9,7 +9,8 @@ import pytest
 
 from repro.checkpoint import load_train_state, save_train_state
 from repro.core import (EnvCfg, T2DRLCfg, eval_t2drl, export_policy,
-                        t2drl_init, t2drl_init_batch, train_t2drl)
+                        greedy_frame_cache, t2drl_init, t2drl_init_batch,
+                        train_t2drl)
 from repro.fleet import FleetCfg, latency_quantiles, simulate_fleet
 from repro.scenarios import build_scenario
 
@@ -202,7 +203,7 @@ def test_batched_shared_train_state_roundtrip_bit_identity(tmp_path):
                             meta={"policy": "shared", "num_envs": 2})
     back, meta = load_train_state(path)
     assert meta["num_envs"] == 2
-    assert set(back) == {"models", "d3pg", "ddqn", "ebuf", "fbuf"}
+    assert set(back) == {"models", "d3pg", "ddqn", "ebuf", "fbuf", "cache"}
     for a, b in zip(jax.tree.leaves(ts), jax.tree.leaves(back)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     ev_live = eval_t2drl(ts, cfg, episodes=2)
@@ -219,6 +220,41 @@ def test_batched_shared_train_state_roundtrip_bit_identity(tmp_path):
     r2 = simulate_fleet(back, cfg, FCFG, seed=2)
     for k in SCALARS:
         assert r1[k] == r2[k], k
+
+
+def test_arc_policy_checkpoint_roundtrip(tmp_path):
+    """Classical-cacher deployment pin (DESIGN.md §14): train an ARC
+    baseline, checkpoint it, restore it, and serve through the twin —
+    the frozen resident set survives the round trip bit-identically and
+    the restored state serves the exact same traffic outcome."""
+    cfg = dataclasses.replace(RCARS, cacher="arc")
+    ts, _ = train_t2drl(cfg, episodes=2)
+    path = save_train_state(str(tmp_path / "arc.msgpack"), ts,
+                            meta={"method": "cacher-arc"})
+    back, meta = load_train_state(path)
+    assert meta["method"] == "cacher-arc"
+    for a, b in zip(jax.tree.leaves(ts), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # exported policy is the frozen resident set, identical across the trip
+    pol_live = export_policy(ts, cfg)
+    pol_back = export_policy(back, cfg)
+    assert set(pol_live) == {"cache"}
+    rho_live = np.asarray(pol_live["cache"]["rho"])
+    np.testing.assert_array_equal(rho_live,
+                                  np.asarray(pol_back["cache"]["rho"]))
+    assert rho_live.shape == (ENV.M,)
+    assert set(np.unique(rho_live)) <= {0.0, 1.0}
+    # the greedy serving entry point reads that set verbatim
+    kf = jax.random.PRNGKey(11)
+    gi = jax.numpy.zeros((ENV.M,), jax.numpy.int32)
+    np.testing.assert_array_equal(
+        np.asarray(greedy_frame_cache(pol_back, cfg, ts["models"], gi, kf)),
+        rho_live)
+    r1 = simulate_fleet(ts, cfg, FCFG, num_cells=1, seed=6)
+    r2 = simulate_fleet(back, cfg, FCFG, num_cells=1, seed=6)
+    for k in SCALARS:
+        assert r1[k] == r2[k], k
+    np.testing.assert_array_equal(r1["hist"], r2["hist"])
 
 
 def test_load_rejects_unknown_format(tmp_path):
