@@ -43,6 +43,7 @@ import jax
 from repro.checkpoint import load_train_state, save_train_state
 from repro.core import EnvCfg, t2drl_init_batch, train_t2drl
 from repro.fleet import FleetCfg, simulate_fleet
+from repro.obs import MetricWriter
 from repro.scenarios import build_scenario, list_scenarios
 
 from .bench_scenarios import resolve_scenarios
@@ -55,7 +56,7 @@ def _row(res):
     """JSON-safe slice of a ``simulate_fleet`` result: arrays dropped,
     non-finite values (empty-histogram quantiles) mapped to null so the
     output stays strict JSON."""
-    drop = ("backlog_curve", "hist", "num_cells")
+    drop = ("backlog_curve", "hist", "num_cells", "frames")
     row = {k: float(v) for k, v in res.items() if k not in drop}
     return {k: (v if math.isfinite(v) else None) for k, v in row.items()}
 
@@ -64,8 +65,13 @@ def run(scenarios=("paper-default", "flash-crowd"),
         methods=("t2drl", "rcars"), episodes: int = 25, num_cells: int = 2,
         seed: int = 0, env: EnvCfg | None = None,
         fcfg: FleetCfg = FleetCfg(), ckpt_dir: str | None = None,
-        out_name: str = "fleet.json", verbose: bool = True):
-    """Train → checkpoint → restore → deploy each method across scenarios."""
+        out_name: str = "fleet.json", verbose: bool = True,
+        obs_out: str | None = None):
+    """Train → checkpoint → restore → deploy each method across scenarios.
+
+    ``obs_out``: path of a JSONL telemetry log (DESIGN.md §15) — streams
+    per-frame ``fleet_frame`` tail-latency/drop/backlog series plus a
+    ``fleet_summary`` record for every (scenario, method) deployment."""
     env = env or EnvCfg()
     scenarios = resolve_scenarios(scenarios)
     for m in methods:
@@ -82,54 +88,66 @@ def run(scenarios=("paper-default", "flash-crowd"),
                                  None if builds[n].user_counts is None
                                  else list(builds[n].user_counts)),
                              "methods": {}} for n in scenarios}}
+    writer = MetricWriter(obs_out) if obs_out else None
     last = None
-    for method in methods:
-        cfg = method_cfg(method, env=env, episodes=episodes, seed=seed,
-                         policy="shared")
-        if method in ("t2drl", "ddpg"):
-            ts, _ = train_t2drl(cfg, episodes=episodes, num_envs=num_cells)
-        else:
-            k_init, _ = jax.random.split(jax.random.PRNGKey(cfg.seed))
-            ts = t2drl_init_batch(k_init, cfg, num_cells)
-        path = save_train_state(
-            os.path.join(ckpt_dir, f"{method}.msgpack"), ts,
-            meta={"method": method, "allocator": cfg.allocator,
-                  "cacher": cfg.cacher, "policy": cfg.policy,
-                  "episodes": episodes, "num_cells": num_cells,
-                  "seed": seed})
-        ts, _ = load_train_state(path)          # deploy from the restore
-        for name in scenarios:
-            b = builds[name]
-            if b.env != env:
-                # policy network dims are fixed at train time; scenarios
-                # that transform the EnvCfg need a retrained policy
-                out["scenarios"][name]["methods"][method] = {
-                    "skipped": "scenario transforms EnvCfg"}
-                continue
+    try:
+        for method in methods:
+            cfg = method_cfg(method, env=env, episodes=episodes, seed=seed,
+                             policy="shared")
+            if method in ("t2drl", "ddpg"):
+                ts, _ = train_t2drl(cfg, episodes=episodes,
+                                    num_envs=num_cells)
+            else:
+                k_init, _ = jax.random.split(jax.random.PRNGKey(cfg.seed))
+                ts = t2drl_init_batch(k_init, cfg, num_cells)
+            path = save_train_state(
+                os.path.join(ckpt_dir, f"{method}.msgpack"), ts,
+                meta={"method": method, "allocator": cfg.allocator,
+                      "cacher": cfg.cacher, "policy": cfg.policy,
+                      "episodes": episodes, "num_cells": num_cells,
+                      "seed": seed})
+            ts, _ = load_train_state(path)      # deploy from the restore
+            for name in scenarios:
+                b = builds[name]
+                if b.env != env:
+                    # policy network dims are fixed at train time; scenarios
+                    # that transform the EnvCfg need a retrained policy
+                    out["scenarios"][name]["methods"][method] = {
+                        "skipped": "scenario transforms EnvCfg"}
+                    continue
+                res = simulate_fleet(ts, cfg, fcfg, num_cells=num_cells,
+                                     seed=seed + 1, mods=b.mods,
+                                     user_counts=b.user_counts,
+                                     writer=writer,
+                                     tags={"scenario": name,
+                                           "method": method})
+                out["scenarios"][name]["methods"][method] = dict(
+                    _row(res), ckpt=path)
+                last = (ts, cfg, b)
+                if verbose:
+                    print(f"{name:17s} {method:6s}: "
+                          f"p50 {res['p50_s']:7.1f}s "
+                          f"p95 {res['p95_s']:7.1f}s "
+                          f"p99 {res['p99_s']:7.1f}s "
+                          f"slo {res['slo_viol_rate']:.3f} "
+                          f"miss {res['deadline_miss_rate']:.3f} "
+                          f"drop {res['drop_rate']:.3f} "
+                          f"req {res['requests']:8.0f}", flush=True)
+        if last is not None:
+            # warm re-run (jit cache hit) = the sustained simulation rate
+            ts, cfg, b = last
             res = simulate_fleet(ts, cfg, fcfg, num_cells=num_cells,
                                  seed=seed + 1, mods=b.mods,
                                  user_counts=b.user_counts)
-            out["scenarios"][name]["methods"][method] = dict(
-                _row(res), ckpt=path)
-            last = (ts, cfg, b)
+            out["sustained_requests_per_min"] = float(
+                res["requests_per_min"])
             if verbose:
-                print(f"{name:17s} {method:6s}: "
-                      f"p50 {res['p50_s']:7.1f}s p95 {res['p95_s']:7.1f}s "
-                      f"p99 {res['p99_s']:7.1f}s "
-                      f"slo {res['slo_viol_rate']:.3f} "
-                      f"miss {res['deadline_miss_rate']:.3f} "
-                      f"drop {res['drop_rate']:.3f} "
-                      f"req {res['requests']:8.0f}", flush=True)
-    if last is not None:
-        # warm re-run (jit cache hit) = the sustained simulation rate
-        ts, cfg, b = last
-        res = simulate_fleet(ts, cfg, fcfg, num_cells=num_cells,
-                             seed=seed + 1, mods=b.mods,
-                             user_counts=b.user_counts)
-        out["sustained_requests_per_min"] = float(res["requests_per_min"])
-        if verbose:
-            print(f"sustained twin rate: "
-                  f"{res['requests_per_min']:.3g} simulated requests/min")
+                print(f"sustained twin rate: "
+                      f"{res['requests_per_min']:.3g} simulated "
+                      f"requests/min")
+    finally:
+        if writer is not None:
+            writer.close()
     path = save_json(out_name, out)
     if verbose:
         print(f"wrote {path}")
@@ -145,9 +163,13 @@ def main():
     ap.add_argument("--episodes", type=int, default=25)
     ap.add_argument("--num-cells", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs-out", default=None,
+                    help="JSONL telemetry log path; streams per-frame "
+                         "fleet series (DESIGN.md §15)")
     args = ap.parse_args()
     run(scenarios=args.scenarios.split(","), methods=args.methods.split(","),
-        episodes=args.episodes, num_cells=args.num_cells, seed=args.seed)
+        episodes=args.episodes, num_cells=args.num_cells, seed=args.seed,
+        obs_out=args.obs_out)
 
 
 if __name__ == "__main__":

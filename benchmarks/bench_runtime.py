@@ -55,6 +55,7 @@ from repro.core import (EnvCfg, GACfg, T2DRLCfg, actor_act, env_reset,
                         ga_allocate, make_actor_schedule, make_models,
                         observe, run_training, run_training_sharded,
                         t2drl_init, t2drl_init_batch)
+from repro.obs import ObsCfg, profiler_trace
 from .common import OUT_DIR, save_json
 
 # Pre-refactor (PR 3, commit ae1b38e) shared-learner B=8 throughput on the
@@ -297,6 +298,39 @@ def run_breakdown(num_envs=(1, 8), episodes: int = 4, reps: int = 3,
     return out
 
 
+def run_obs_overhead(episodes: int = 4, reps: int = 3, seed: int = 0,
+                     trace_dir: str | None = None, verbose=True) -> dict:
+    """Telemetry cost: the fully-tapped in-scan diagnostics program
+    (``obs=ObsCfg(enabled=True)``, DESIGN.md §15) vs the identical
+    telemetry-off training run, at B=1 on the paper workload.  The ISSUE-8
+    acceptance bound is <5% wall-clock overhead.  ``trace_dir`` wraps the
+    telemetry-on measurement in a ``jax.profiler`` trace.
+
+    Writes an ``obs_overhead`` section into runtime.json."""
+    base = _throughput_cfg("independent")            # obs off by default
+    tapped = dataclasses.replace(base, obs=ObsCfg(enabled=True))
+    t_off, off_times, c_off = _measure(base, 1, episodes, reps, seed)
+    with profiler_trace(trace_dir):
+        t_on, on_times, c_on = _measure(tapped, 1, episodes, reps, seed)
+    overhead = t_on / t_off - 1.0
+    out = {"obs_overhead": {
+        "episodes": episodes, "reps": reps,
+        "off_s": round(t_off, 3), "on_s": round(t_on, 3),
+        "off_spread_s": [round(t, 3) for t in off_times],
+        "on_spread_s": [round(t, 3) for t in on_times],
+        "compile_off_s": round(c_off, 2), "compile_on_s": round(c_on, 2),
+        "overhead_frac": round(overhead, 4),
+        "host": {"cpu_count": os.cpu_count(),
+                 "device_count": jax.device_count()}}}
+    if verbose:
+        print(f"obs overhead: off {t_off:.2f}s, on {t_on:.2f}s -> "
+              f"{100 * overhead:+.1f}% (acceptance < +5%)", flush=True)
+        if trace_dir:
+            print(f"profiler trace written under {trace_dir}", flush=True)
+    _merge_runtime_json(out)
+    return out
+
+
 def run_smoke(floor: float = SMOKE_FLOOR, episodes: int = 2, reps: int = 2,
               verbose=True) -> dict:
     """CI gates, all on the same 2-episode compiled paths the full bench
@@ -401,9 +435,19 @@ def main():
     ap.add_argument("--breakdown", action="store_true",
                     help="per-stage timing attribution (compile / rollout+"
                          "replay-write / update) for the independent path")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="telemetry-on vs telemetry-off wall-clock cost of "
+                         "the in-scan diagnostics (DESIGN.md §15)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="with --obs-overhead: write a jax.profiler trace "
+                         "of the telemetry-on run under this directory")
     args = ap.parse_args()
     if args.smoke:
         run_smoke(floor=args.floor)
+        return
+    if args.obs_overhead:
+        run_obs_overhead(episodes=args.episodes, reps=args.reps,
+                         trace_dir=args.trace_dir)
         return
     if args.breakdown:
         run_breakdown(tuple(args.num_envs), episodes=args.episodes)

@@ -29,6 +29,7 @@ import argparse
 import numpy as np
 
 from repro.core import EnvCfg
+from repro.obs import MetricWriter, ObsCfg
 from repro.scenarios import build_scenario, list_scenarios
 
 from .common import save_json, train_and_eval
@@ -53,14 +54,17 @@ def run(scenarios=("all",), methods=("t2drl", "rcars"), episodes: int = 25,
         eval_episodes: int = 5, num_envs: int = 2, seed: int = 0,
         policy: str = "shared", env: EnvCfg | None = None,
         out_name: str = "scenarios.json", verbose: bool = True,
-        cfg_overrides: dict | None = None):
+        cfg_overrides: dict | None = None, obs_out: str | None = None):
     """Sweep scenarios × methods; returns (and saves) the breakdown dict.
 
     ``cfg_overrides`` maps extra ``T2DRLCfg`` fields onto the learned
     methods — e.g. the exploration / learning-rate schedules
     (``eps_schedule``, ``lr_schedule``, ``lr_warmdown_episodes``,
     ``lr_end_scale``) the long-horizon convergence preset tunes
-    (DESIGN.md §12)."""
+    (DESIGN.md §12).  ``obs_out``: path of a JSONL telemetry log
+    (DESIGN.md §15) — enables in-scan learner diagnostics
+    (``obs=ObsCfg(enabled=True)``) on the learned methods and streams
+    ``train_chunk`` + per-method ``eval`` records there."""
     env = env or EnvCfg()
     cfg_overrides = dict(cfg_overrides or {})
     scenarios = resolve_scenarios(scenarios)
@@ -68,40 +72,56 @@ def run(scenarios=("all",), methods=("t2drl", "rcars"), episodes: int = 25,
         if method not in METHODS:
             raise SystemExit(f"unknown method {method!r}; "
                              f"expected one of {METHODS}")
+    writer = None
+    if obs_out:
+        writer = MetricWriter(obs_out)
+        cfg_overrides.setdefault("obs", ObsCfg(enabled=True))
+        writer.ensure_manifest(extra={"harness": "bench_scenarios",
+                                      "episodes": episodes,
+                                      "num_envs": num_envs,
+                                      "policy": policy})
     reg = list_scenarios()
     out = {"episodes": episodes, "num_envs": num_envs, "policy": policy,
            "eval_episodes": eval_episodes,
            "cfg_overrides": cfg_overrides, "scenarios": {}}
-    for name in scenarios:
-        b = build_scenario(name, env, num_envs)
-        row = {"summary": reg[name],
-               "user_counts": (None if b.user_counts is None
-                               else list(b.user_counts)),
-               "methods": {}}
-        for method in methods:
-            hist, ev = train_and_eval(
-                method, env=b.env, episodes=episodes,
-                eval_episodes=eval_episodes, seed=seed, num_envs=num_envs,
-                mods=b.mods, user_counts=b.user_counts, policy=policy,
-                **cfg_overrides)
-            if hist is not None:
-                r = np.asarray(hist["episode_reward"])
-                ev["final_reward_mean_last10"] = float(r[-10:].mean())
-            else:
-                ev["final_reward_mean_last10"] = None
-            row["methods"][method] = ev
-            if verbose:
-                print(f"{name:17s} {method:6s}: "
-                      f"reward {ev['mean_reward']:8.2f} "
-                      f"hit {ev['hit_ratio']:.3f} "
-                      f"delay {ev['delay']:7.2f} "
-                      f"quality {ev['quality']:6.2f} "
-                      f"viol {ev['deadline_viol']:.3f} "
-                      f"[{ev['train_s']}s]", flush=True)
-        out["scenarios"][name] = row
+    try:
+        for name in scenarios:
+            b = build_scenario(name, env, num_envs)
+            row = {"summary": reg[name],
+                   "user_counts": (None if b.user_counts is None
+                                   else list(b.user_counts)),
+                   "methods": {}}
+            for method in methods:
+                hist, ev = train_and_eval(
+                    method, env=b.env, episodes=episodes,
+                    eval_episodes=eval_episodes, seed=seed,
+                    num_envs=num_envs, mods=b.mods,
+                    user_counts=b.user_counts, policy=policy,
+                    writer=writer, **cfg_overrides)
+                if hist is not None:
+                    r = np.asarray(hist["episode_reward"])
+                    ev["final_reward_mean_last10"] = float(r[-10:].mean())
+                else:
+                    ev["final_reward_mean_last10"] = None
+                row["methods"][method] = ev
+                if writer is not None:
+                    writer.write("eval", metrics=ev, scenario=name,
+                                 method=method)
+                if verbose:
+                    print(f"{name:17s} {method:6s}: "
+                          f"reward {ev['mean_reward']:8.2f} "
+                          f"hit {ev['hit_ratio']:.3f} "
+                          f"delay {ev['delay']:7.2f} "
+                          f"quality {ev['quality']:6.2f} "
+                          f"viol {ev['deadline_viol']:.3f} "
+                          f"[{ev['train_s']}s]", flush=True)
+            out["scenarios"][name] = row
+    finally:
+        if writer is not None:
+            writer.close()
     path = save_json(out_name, out)
     if verbose:
-        print(f"wrote {path}")
+        print(f"wrote {path}" + (f" and {obs_out}" if obs_out else ""))
     return out
 
 
@@ -129,11 +149,14 @@ def main():
                     help="LR warmdown horizon in episodes")
     ap.add_argument("--lr-end-scale", type=float, default=0.1,
                     help="final LR as a fraction of the initial rate")
+    ap.add_argument("--obs-out", default=None,
+                    help="JSONL telemetry log path; enables in-scan "
+                         "learner diagnostics (DESIGN.md §15)")
     args = ap.parse_args()
     run(scenarios=args.scenarios.split(","),
         methods=args.methods.split(","), episodes=args.episodes,
         eval_episodes=args.eval_episodes, num_envs=args.num_envs,
-        seed=args.seed, policy=args.policy,
+        seed=args.seed, policy=args.policy, obs_out=args.obs_out,
         cfg_overrides=dict(eps_schedule=args.eps_schedule,
                            lr_schedule=args.lr_schedule,
                            lr_warmdown_episodes=args.lr_warmdown_episodes,

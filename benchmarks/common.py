@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.core import (CACHE_POLICIES, T2DRLCfg, EnvCfg, eval_t2drl,
                         t2drl_init, t2drl_init_batch, train_t2drl)
+from repro.obs import run_manifest, to_jsonable
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
 
@@ -57,7 +58,7 @@ def _needs_training(method: str) -> bool:
 def train_and_eval(method: str, *, env: EnvCfg, episodes: int,
                    eval_episodes: int = 5, L: int = 5, seed: int = 0,
                    num_envs: int = 1, mods=None, user_counts=None,
-                   share_models: bool = False, **overrides):
+                   share_models: bool = False, writer=None, **overrides):
     """Train (if learning-based) then greedy-eval.  Returns (history, eval).
 
     ``num_envs`` trains B parallel cells through the vectorized core
@@ -67,14 +68,16 @@ def train_and_eval(method: str, *, env: EnvCfg, episodes: int,
     ``mods``/``user_counts`` run a scenario (see ``repro.scenarios`` —
     pass ``build_scenario(...).mods`` / ``.user_counts`` together with its
     transformed ``.env``); both the learned methods and the SCHRS/RCARS
-    baselines then face the identical modulated workload."""
+    baselines then face the identical modulated workload.  ``writer``: an
+    optional ``repro.obs.MetricWriter`` receiving the training run's
+    telemetry records (DESIGN.md §15)."""
     cfg = method_cfg(method, env=env, episodes=episodes, L=L, seed=seed,
                      **overrides)
     t0 = time.time()
     if _needs_training(method):
         ts, hist = train_t2drl(cfg, episodes=episodes, num_envs=num_envs,
                                mods=mods, user_counts=user_counts,
-                               share_models=share_models)
+                               share_models=share_models, writer=writer)
     else:
         # same init-key derivation as train_t2drl, so the non-learning
         # baselines run on the SAME model zoos as the learning methods
@@ -92,10 +95,20 @@ def train_and_eval(method: str, *, env: EnvCfg, episodes: int,
 
 
 def save_json(name: str, payload) -> str:
+    """Write a benchmark result to ``OUT_DIR``.  Dict payloads are stamped
+    with a run manifest (schema, run id, git sha, jax/device info — see
+    ``repro.obs.run_manifest``) under ``"manifest"`` unless the caller
+    already provided one, so every ``benchmarks/*.json`` /
+    ``experiments/bench/*.json`` artifact records its provenance."""
+    if isinstance(payload, dict):
+        payload.setdefault("manifest", run_manifest())
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, name)
     with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+        # to_jsonable maps arrays / np scalars to JSON values and nested
+        # config dataclasses (e.g. an ObsCfg inside cfg_overrides) to
+        # their reprs, so any payload a bench assembles serializes
+        json.dump(to_jsonable(payload), f, indent=1)
     return path
 
 

@@ -90,6 +90,9 @@ def main():
                     help="named run configuration (overrides the non-"
                          "schedule flags it sets; explicit schedule flags "
                          "win over the preset's)")
+    ap.add_argument("--obs-out", default=None,
+                    help="JSONL telemetry log path; enables in-scan "
+                         "learner diagnostics (DESIGN.md §15)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI-scale sweep (overrides sizes/episodes)")
     args = ap.parse_args()
@@ -102,6 +105,7 @@ def main():
               methods=args.methods.split(","), episodes=args.episodes,
               eval_episodes=args.eval_episodes, num_envs=args.num_envs,
               policy=args.policy, seed=args.seed, out_name=args.out,
+              obs_out=args.obs_out,
               env=EnvCfg(U=args.users, M=args.models, T=args.frames,
                          K=args.slots))
     if args.preset:

@@ -66,6 +66,9 @@ def main():
     ap.add_argument("--out", default="fleet.json",
                     help="output file name under experiments/bench/ "
                          "(or $REPRO_BENCH_OUT)")
+    ap.add_argument("--obs-out", default=None,
+                    help="JSONL telemetry log path; streams per-frame "
+                         "fleet series (DESIGN.md §15)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI-scale sweep; asserts the sustained twin "
                          f"rate >= {SMOKE_RATE_FLOOR:.0e} requests/min")
@@ -78,7 +81,8 @@ def main():
     kw = dict(scenarios=args.scenarios.split(","),
               methods=args.methods.split(","), episodes=args.episodes,
               num_cells=args.num_cells, seed=args.seed, env=env, fcfg=fcfg,
-              ckpt_dir=args.ckpt_dir, out_name=args.out)
+              ckpt_dir=args.ckpt_dir, out_name=args.out,
+              obs_out=args.obs_out)
     if args.smoke:
         print("--smoke: overriding scenario/method/size/rate flags with "
               "the CI preset")

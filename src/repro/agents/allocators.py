@@ -15,8 +15,9 @@ import jax.numpy as jnp
 
 from repro.core.baselines import GACfg, ga_allocate, rcars_allocate
 from repro.core.d3pg import (D3PGCfg, actor_act, actor_act_stacked,
-                             amend_actions, d3pg_init, d3pg_update,
-                             d3pg_update_stacked, make_actor_schedule)
+                             amend_actions, d3pg_diag_zero, d3pg_init,
+                             d3pg_update, d3pg_update_stacked,
+                             make_actor_schedule)
 from repro.core.env import EnvCfg
 
 from .base import Agent, no_update
@@ -24,7 +25,7 @@ from .base import Agent, no_update
 _UPDATE_AUX = ("mask", "lr_actor", "lr_critic")
 
 
-def d3pg_allocator(d3: D3PGCfg, sched=None) -> Agent:
+def d3pg_allocator(d3: D3PGCfg, sched=None, diag: bool = False) -> Agent:
     """The paper's D3PG allocator (``actor_kind="mlp"`` recovers DDPG).
 
     ``act`` consumes a ``(2, 2)`` stacked key pair — ``keys[0]`` drives the
@@ -33,7 +34,10 @@ def d3pg_allocator(d3: D3PGCfg, sched=None) -> Agent:
     step used, so the episode PRNG stream is unchanged.  ``act`` is
     batch-transparent: one key pair serves a whole ``(B, S)`` lockstep
     batch (``batch_act=None``).  ``sched`` overrides the actor's diffusion
-    schedule (default: derived from ``d3``)."""
+    schedule (default: derived from ``d3``).  ``diag=True`` builds the
+    telemetry variant (DESIGN.md §15): ``update`` returns the extended
+    diagnostics dict and ``diag_zero`` is provided for the driver's
+    in-scan tap."""
     sched = make_actor_schedule(d3) if sched is None else sched
     U = d3.action_dim // 2
 
@@ -49,7 +53,7 @@ def d3pg_allocator(d3: D3PGCfg, sched=None) -> Agent:
         return d3pg_update(state, d3, sched, data, key,
                            mask=batch.get("mask"),
                            lr_a=batch.get("lr_actor"),
-                           lr_c=batch.get("lr_critic"))
+                           lr_c=batch.get("lr_critic"), diag=diag)
 
     def greedy(policy, obs, key):
         raw = actor_act(policy["actor"], d3, sched, obs.s, key)
@@ -74,7 +78,7 @@ def d3pg_allocator(d3: D3PGCfg, sched=None) -> Agent:
         return d3pg_update_stacked(state, d3, sched, data, keys,
                                    mask=batch.get("mask"),
                                    lr_a=batch.get("lr_actor"),
-                                   lr_c=batch.get("lr_critic"))
+                                   lr_c=batch.get("lr_critic"), diag=diag)
 
     return Agent(name="d3pg" if d3.actor_kind == "diffusion" else "ddpg",
                  learns=True,
@@ -82,7 +86,8 @@ def d3pg_allocator(d3: D3PGCfg, sched=None) -> Agent:
                  act=act, update=update,
                  export=lambda state: {"actor": state["actor"]},
                  greedy=greedy,
-                 act_stacked=act_stacked, update_stacked=update_stacked)
+                 act_stacked=act_stacked, update_stacked=update_stacked,
+                 diag_zero=(lambda: d3pg_diag_zero(d3)) if diag else None)
 
 
 def schrs_allocator(env_cfg: EnvCfg, ga: GACfg) -> Agent:
@@ -130,11 +135,13 @@ ALLOCATORS = ("d3pg", "ddpg", "schrs", "rcars")
 
 
 def make_allocator(kind: str, env_cfg: EnvCfg, d3: D3PGCfg,
-                   ga: GACfg) -> Agent:
+                   ga: GACfg, diag: bool = False) -> Agent:
     """Dispatch a short-timescale allocator name to its Agent bundle — the
-    only place allocator kinds are branched on (DESIGN.md §12)."""
+    only place allocator kinds are branched on (DESIGN.md §12).  ``diag``
+    builds the learned allocator with telemetry diagnostics (no-op for
+    the non-learned baselines)."""
     if kind in ("d3pg", "ddpg"):
-        return d3pg_allocator(d3)
+        return d3pg_allocator(d3, diag=diag)
     if kind == "schrs":
         return schrs_allocator(env_cfg, ga)
     if kind == "rcars":

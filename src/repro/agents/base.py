@@ -111,6 +111,15 @@ class Agent(NamedTuple):
         (every learned/stateless agent) keeps the driver's compiled
         program byte-identical to the pre-§14 one; the driver branches on
         ``step_frame is not None`` python-statically.
+    diag_zero : callable, optional
+        Telemetry (DESIGN.md §15): ``diag_zero() -> dict`` — a zeros
+        pytree structurally matching the metrics this agent's ``update``
+        returns when built with diagnostics on.  The driver's in-scan
+        taps use it as the skipped-update branch of the ``lax.cond``
+        around ``update`` (warmup / buffer-fill gating needs both
+        branches to return the same pytree).  ``None`` (the default, and
+        every agent built with ``diag=False``) declares no tap; the
+        driver then compiles the exact pre-telemetry program.
     """
     name: str
     learns: bool
@@ -123,6 +132,7 @@ class Agent(NamedTuple):
     act_stacked: Optional[Callable] = None
     update_stacked: Optional[Callable] = None
     step_frame: Optional[Callable] = None
+    diag_zero: Optional[Callable] = None
 
 
 def no_update(state, batch, key):

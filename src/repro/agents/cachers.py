@@ -24,20 +24,22 @@ from repro.core.cache_policies import (CACHE_POLICIES, cache_access,
                                        cache_rho, cache_state_init,
                                        quantize_capacity, quantize_sizes)
 from repro.core.ddqn import (DDQNCfg, amend_caching, ddqn_act,
-                             ddqn_act_stacked, ddqn_init, ddqn_update,
-                             ddqn_update_stacked)
+                             ddqn_act_stacked, ddqn_diag_zero, ddqn_init,
+                             ddqn_update, ddqn_update_stacked)
 from repro.core.env import EnvCfg
 
 from .base import Agent, no_update
 
 
-def ddqn_cacher(dq: DDQNCfg, env_cfg: EnvCfg) -> Agent:
+def ddqn_cacher(dq: DDQNCfg, env_cfg: EnvCfg, diag: bool = False) -> Agent:
     """The paper's DDQN cacher over the 2^M caching actions.
 
     ``act`` is batch-transparent in the epsilon-greedy draw (one key drives
     a ``(B,)`` batch of popularity states, as the legacy lockstep frame
     step did); the amender is vmapped only when the model zoo carries a
-    cell axis."""
+    cell axis.  ``diag=True`` builds the telemetry variant (DESIGN.md
+    §15): ``update`` returns the extended diagnostics dict and
+    ``diag_zero`` is provided for the driver's in-scan tap."""
 
     def act(state, obs, key, step):
         a_int = ddqn_act(state, dq, obs.gamma_idx, key, step["eps"])
@@ -52,8 +54,8 @@ def ddqn_cacher(dq: DDQNCfg, env_cfg: EnvCfg) -> Agent:
 
     def update(state, batch, key):
         data = {k: v for k, v in batch.items() if k != "lr"}
-        new, loss = ddqn_update(state, dq, data, lr=batch.get("lr"))
-        return new, {"loss": loss}
+        new, m = ddqn_update(state, dq, data, lr=batch.get("lr"), diag=diag)
+        return new, (m if diag else {"loss": m})
 
     def greedy(policy, obs, key):
         a_int = ddqn_act(policy["ddqn"], dq, obs.gamma_idx, key, 0.0)
@@ -71,15 +73,17 @@ def ddqn_cacher(dq: DDQNCfg, env_cfg: EnvCfg) -> Agent:
 
     def update_stacked(state, batch, keys):
         data = {k: v for k, v in batch.items() if k != "lr"}
-        new, loss = ddqn_update_stacked(state, dq, data, lr=batch.get("lr"))
-        return new, {"loss": loss}
+        new, m = ddqn_update_stacked(state, dq, data, lr=batch.get("lr"),
+                                     diag=diag)
+        return new, (m if diag else {"loss": m})
 
     return Agent(name="ddqn", learns=True,
                  init=lambda key: ddqn_init(key, dq),
                  act=act, update=update,
                  export=lambda state: {"ddqn": {"q": state["q"]}},
                  greedy=greedy, batch_act=batch_act,
-                 act_stacked=act_stacked, update_stacked=update_stacked)
+                 act_stacked=act_stacked, update_stacked=update_stacked,
+                 diag_zero=(lambda: ddqn_diag_zero(dq)) if diag else None)
 
 
 def static_cacher(env_cfg: EnvCfg) -> Agent:
@@ -173,11 +177,14 @@ def classical_cacher(kind: str, env_cfg: EnvCfg) -> Agent:
 CACHERS = ("ddqn", "static", "random") + CACHE_POLICIES
 
 
-def make_cacher(kind: str, dq: DDQNCfg, env_cfg: EnvCfg) -> Agent:
+def make_cacher(kind: str, dq: DDQNCfg, env_cfg: EnvCfg,
+                diag: bool = False) -> Agent:
     """Dispatch a long-timescale cacher name to its Agent bundle — the
-    only place cacher kinds are branched on (DESIGN.md §12)."""
+    only place cacher kinds are branched on (DESIGN.md §12).  ``diag``
+    builds the DDQN cacher with telemetry diagnostics (no-op for the
+    non-learned baselines)."""
     if kind == "ddqn":
-        return ddqn_cacher(dq, env_cfg)
+        return ddqn_cacher(dq, env_cfg, diag=diag)
     if kind == "static":
         return static_cacher(env_cfg)
     if kind == "random":

@@ -25,6 +25,19 @@ def buffer_add(buf, item):
             "size": jnp.minimum(buf["size"] + 1, cap)}
 
 
+def buffer_occupancy(buf, prefix: str, capacity: int | None = None) -> dict:
+    """Telemetry (DESIGN.md §15): ``{prefix_size, prefix_fill}`` — stored
+    items and fill fraction.  A per-env ``size`` of shape (B,) rides
+    through unchanged; pass ``capacity`` explicitly for batched/stacked
+    layouts whose leading leaf axis is B, not the capacity.  Sampling is
+    uniform, so occupancy is the whole replay story — there are no
+    priority weights to report."""
+    cap = _capacity(buf) if capacity is None else capacity
+    size = buf["size"]
+    return {prefix + "_size": size.astype(jnp.float32),
+            prefix + "_fill": size.astype(jnp.float32) / cap}
+
+
 def buffer_sample(buf, key, batch: int):
     """Uniform minibatch draw **with replacement** (DESIGN.md §12).
 

@@ -15,8 +15,11 @@ import jax.numpy as jnp
 
 from repro.diffusion import (denoiser_init, make_schedule,
                              reverse_sample_actions,
-                             reverse_sample_actions_stacked)
+                             reverse_sample_actions_stacked,
+                             reverse_sample_actions_stacked_stats,
+                             reverse_sample_actions_stats)
 from repro.optim import adam_init, adam_update, adam_update_stacked
+from .ddqn import _tree_l2, _tree_l2_stacked
 from .networks import (mlp_apply, mlp_apply_stacked, mlp_init, soft_update)
 
 
@@ -106,15 +109,39 @@ def amend_actions(raw, req, rho, U: int, *, b_floor: float = 0.01,
     return b, xi
 
 
+def d3pg_diag_zero(cfg: D3PGCfg) -> dict:
+    """Zeros pytree matching the diag metrics of ``d3pg_update(diag=True)``
+    (the skipped-update branch of the in-scan ``lax.cond`` tap).  The
+    ``denoise_mag`` leaf — per-step mean |eps_hat| of the target actor's
+    reverse chain, (L,) — exists only for the diffusion actor."""
+    z = jnp.zeros((), jnp.float32)
+    out = {"critic_loss": z, "actor_loss": z, "q_mean": z,
+           "td_abs_mean": z, "td_abs_max": z,
+           "actor_grad_norm": z, "critic_grad_norm": z}
+    if cfg.actor_kind == "diffusion":
+        out["denoise_mag"] = jnp.zeros((cfg.L,), jnp.float32)
+    return out
+
+
 def d3pg_update(params, cfg: D3PGCfg, sched, batch, key, *,
-                lr_a=None, lr_c=None, impl: str = "xla", mask=None):
+                lr_a=None, lr_c=None, impl: str = "xla", mask=None,
+                diag=False):
     """One minibatch step of Eqs. (24)-(29).
 
     batch: {s, a, r, s1, req1, rho1} — a is the *amended* action executed;
     the target action for s1 is re-amended using req1/rho1.  ``mask`` is an
     active-user mask — (U,) shared across the minibatch, or (batch, U)
     per-row when the rows come from different cells — so target and policy
-    actions are amended on the same restricted simplex the env ran on."""
+    actions are amended on the same restricted simplex the env ran on.
+
+    ``diag=True`` (telemetry, DESIGN.md §15) extends the metrics dict with
+    critic Q/TD statistics, gradient norms, and (diffusion actor) the
+    per-step denoising magnitudes of the target chain; the diag chain uses
+    the XLA step math regardless of ``impl``.  The ``diag=False`` path is
+    deliberately left byte-identical to the pre-telemetry build."""
+    if diag:
+        return _d3pg_update_diag(params, cfg, sched, batch, key,
+                                 lr_a=lr_a, lr_c=lr_c, mask=mask)
     lr_a = cfg.lr_actor if lr_a is None else lr_a
     lr_c = cfg.lr_critic if lr_c is None else lr_c
     k_t, k_pi = jax.random.split(key)
@@ -164,6 +191,72 @@ def d3pg_update(params, cfg: D3PGCfg, sched, batch, key, *,
            "opt_a": opt_a_new, "opt_c": opt_c_new}
     return new, {"critic_loss": c_loss, "actor_loss": a_loss}
 
+
+def _d3pg_update_diag(params, cfg: D3PGCfg, sched, batch, key, *,
+                      lr_a=None, lr_c=None, mask=None):
+    """``d3pg_update`` with the telemetry tap: same math and PRNG stream,
+    plus diagnostics (keys pinned by ``d3pg_diag_zero``)."""
+    lr_a = cfg.lr_actor if lr_a is None else lr_a
+    lr_c = cfg.lr_critic if lr_c is None else lr_c
+    k_t, k_pi = jax.random.split(key)
+    U = cfg.action_dim // 2
+    if mask is not None and jnp.ndim(mask) == 2:
+        _amend_row = jax.vmap(
+            lambda raw, req, rho, m: amend_actions(raw, req, rho, U, mask=m))
+        amend = lambda raw, req, rho: _amend_row(raw, req, rho, mask)
+    else:
+        amend = jax.vmap(lambda raw, req, rho: amend_actions(
+            raw, req, rho, U, mask=mask))
+
+    # --- critic (24), tapping the target chain's denoising magnitudes --------
+    if cfg.actor_kind == "diffusion":
+        raw1, chain = reverse_sample_actions_stats(
+            params["actor_t"], sched, batch["s1"], k_t, cfg.action_dim)
+    else:
+        raw1 = actor_act(params["actor_t"], cfg, sched, batch["s1"], k_t)
+        chain = {}
+    b1, xi1 = amend(raw1, batch["req1"], batch["rho1"])
+    a1 = jnp.concatenate([b1, xi1], axis=-1)
+    y_hat = batch["r"] + cfg.omega * critic_q(params["critic_t"],
+                                              batch["s1"], a1)
+    y_hat = jax.lax.stop_gradient(y_hat)
+
+    def critic_loss(c):
+        y = critic_q(c, batch["s"], batch["a"])
+        return jnp.mean(0.5 * (y_hat - y) ** 2), y
+
+    (c_loss, y), c_grads = jax.value_and_grad(
+        critic_loss, has_aux=True)(params["critic"])
+    critic_new, opt_c_new, _ = adam_update(c_grads, params["opt_c"],
+                                           params["critic"], lr=lr_c)
+
+    # --- actor (26)-(27) -----------------------------------------------------
+    def actor_loss(a_params):
+        raw = actor_act(a_params, cfg, sched, batch["s"], k_pi)
+        b, xi = amend(raw, batch["req"], batch["rho"])
+        act = jnp.concatenate([b, xi], axis=-1)
+        return -jnp.mean(critic_q(critic_new, batch["s"], act))
+
+    a_loss, a_grads = jax.value_and_grad(actor_loss)(params["actor"])
+    actor_new, opt_a_new, _ = adam_update(a_grads, params["opt_a"],
+                                          params["actor"], lr=lr_a)
+
+    new = {"actor": actor_new,
+           "actor_t": soft_update(params["actor_t"], actor_new,
+                                  cfg.eps_target),
+           "critic": critic_new,
+           "critic_t": soft_update(params["critic_t"], critic_new,
+                                   cfg.eps_target),
+           "opt_a": opt_a_new, "opt_c": opt_c_new}
+    td = y_hat - y
+    metrics = {"critic_loss": c_loss, "actor_loss": a_loss,
+               "q_mean": jnp.mean(y),
+               "td_abs_mean": jnp.mean(jnp.abs(td)),
+               "td_abs_max": jnp.max(jnp.abs(td)),
+               "actor_grad_norm": _tree_l2(a_grads),
+               "critic_grad_norm": _tree_l2(c_grads), **chain}
+    return new, metrics
+
 # Batched (per-env leading axis) init/update live behind the agent protocol:
 # repro.agents.vmap_agent generically lifts any Agent to B stacked learners
 # (d3pg_init_batch / d3pg_update_batch remain as shims in repro.agents).
@@ -196,7 +289,7 @@ def critic_q_stacked(critic_params, state, action):
 
 
 def d3pg_update_stacked(params, cfg: D3PGCfg, sched, batch, keys, *,
-                        lr_a=None, lr_c=None, mask=None):
+                        lr_a=None, lr_c=None, mask=None, diag=False):
     """Fused ``d3pg_update`` over B stacked learners.
 
     params: stacked (leading ``(B,)`` on every leaf); batch leaves:
@@ -204,7 +297,12 @@ def d3pg_update_stacked(params, cfg: D3PGCfg, sched, batch, keys, *,
     ``lr_a``/``lr_c``: python scalars or per-learner ``(B,)`` arrays (the
     population lever); ``mask``: optional ``(B, U)`` per-cell active-user
     mask.  Returns ``(new_params, {"critic_loss": (B,), "actor_loss":
-    (B,)})`` exactly like ``jax.vmap(d3pg_update)``."""
+    (B,)})`` exactly like ``jax.vmap(d3pg_update)``.  ``diag=True``
+    extends the metrics dict with per-learner ``(B,)`` diagnostics
+    (``denoise_mag``: ``(B, L)``), key set per ``d3pg_diag_zero``."""
+    if diag:
+        return _d3pg_update_stacked_diag(params, cfg, sched, batch, keys,
+                                         lr_a=lr_a, lr_c=lr_c, mask=mask)
     lr_a = cfg.lr_actor if lr_a is None else lr_a
     lr_c = cfg.lr_critic if lr_c is None else lr_c
     kk = jax.vmap(jax.random.split)(keys)               # (B, 2, 2)
@@ -256,3 +354,70 @@ def d3pg_update_stacked(params, cfg: D3PGCfg, sched, batch, keys, *,
                                    cfg.eps_target),
            "opt_a": opt_a_new, "opt_c": opt_c_new}
     return new, {"critic_loss": c_loss, "actor_loss": a_loss}
+
+
+def _d3pg_update_stacked_diag(params, cfg: D3PGCfg, sched, batch, keys, *,
+                              lr_a=None, lr_c=None, mask=None):
+    """``d3pg_update_stacked`` with the telemetry tap: same fused update,
+    plus per-learner ``(B,)`` diagnostics (``denoise_mag``: ``(B, L)``)."""
+    lr_a = cfg.lr_actor if lr_a is None else lr_a
+    lr_c = cfg.lr_critic if lr_c is None else lr_c
+    kk = jax.vmap(jax.random.split)(keys)               # (B, 2, 2)
+    k_t, k_pi = kk[:, 0], kk[:, 1]
+    U = cfg.action_dim // 2
+    m = None if mask is None else mask[:, None, :]
+    amend = lambda raw, req, rho: amend_actions(raw, req, rho, U, mask=m)
+
+    # --- critic (24), tapping the target chain's denoising magnitudes --------
+    if cfg.actor_kind == "diffusion":
+        raw1, chain = reverse_sample_actions_stacked_stats(
+            params["actor_t"], sched, batch["s1"], k_t, cfg.action_dim)
+    else:
+        raw1 = actor_act_stacked(params["actor_t"], cfg, sched,
+                                 batch["s1"], k_t)
+        chain = {}
+    b1, xi1 = amend(raw1, batch["req1"], batch["rho1"])
+    a1 = jnp.concatenate([b1, xi1], axis=-1)
+    y_hat = batch["r"] + cfg.omega * critic_q_stacked(params["critic_t"],
+                                                      batch["s1"], a1)
+    y_hat = jax.lax.stop_gradient(y_hat)
+
+    def critic_loss(c):
+        y = critic_q_stacked(c, batch["s"], batch["a"])
+        per = jnp.mean(0.5 * (y_hat - y) ** 2, axis=-1)          # (B,)
+        return jnp.sum(per), (per, y)
+
+    (_, (c_loss, y)), c_grads = jax.value_and_grad(
+        critic_loss, has_aux=True)(params["critic"])
+    critic_new, opt_c_new, _ = adam_update_stacked(
+        c_grads, params["opt_c"], params["critic"], lr=lr_c)
+
+    # --- actor (26)-(27) -----------------------------------------------------
+    def actor_loss(a_params):
+        raw = actor_act_stacked(a_params, cfg, sched, batch["s"], k_pi)
+        b, xi = amend(raw, batch["req"], batch["rho"])
+        act = jnp.concatenate([b, xi], axis=-1)
+        per = -jnp.mean(critic_q_stacked(critic_new, batch["s"], act),
+                        axis=-1)                                  # (B,)
+        return jnp.sum(per), per
+
+    (_, a_loss), a_grads = jax.value_and_grad(
+        actor_loss, has_aux=True)(params["actor"])
+    actor_new, opt_a_new, _ = adam_update_stacked(
+        a_grads, params["opt_a"], params["actor"], lr=lr_a)
+
+    new = {"actor": actor_new,
+           "actor_t": soft_update(params["actor_t"], actor_new,
+                                  cfg.eps_target),
+           "critic": critic_new,
+           "critic_t": soft_update(params["critic_t"], critic_new,
+                                   cfg.eps_target),
+           "opt_a": opt_a_new, "opt_c": opt_c_new}
+    td = y_hat - y                                       # (B, n)
+    metrics = {"critic_loss": c_loss, "actor_loss": a_loss,
+               "q_mean": jnp.mean(y, axis=-1),
+               "td_abs_mean": jnp.mean(jnp.abs(td), axis=-1),
+               "td_abs_max": jnp.max(jnp.abs(td), axis=-1),
+               "actor_grad_norm": _tree_l2_stacked(a_grads),
+               "critic_grad_norm": _tree_l2_stacked(c_grads), **chain}
+    return new, metrics

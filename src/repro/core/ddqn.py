@@ -74,9 +74,48 @@ def amend_caching(a_int, cfg: DDQNCfg, c=None, C: float = 0.0):
     return rho
 
 
-def ddqn_update(params, cfg: DDQNCfg, batch, *, lr=None):
+def _tree_l2(t):
+    """Global l2 norm over a parameter/grad pytree."""
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(t)))
+
+
+def _tree_l2_stacked(t):
+    """Per-learner l2 norms, (B,), over a stacked pytree (leading B)."""
+    total = sum(jnp.sum(jnp.square(l).reshape(l.shape[0], -1), axis=1)
+                for l in jax.tree.leaves(t))
+    return jnp.sqrt(total)
+
+
+def _tree_diff_l2(a, b):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x - y)) for x, y in
+                        zip(jax.tree.leaves(a), jax.tree.leaves(b))))
+
+
+def _tree_diff_l2_stacked(a, b):
+    total = sum(jnp.sum(jnp.square(x - y).reshape(x.shape[0], -1), axis=1)
+                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    return jnp.sqrt(total)
+
+
+def ddqn_diag_zero(cfg: DDQNCfg) -> dict:
+    """Zeros pytree matching the diag metrics of ``ddqn_update(diag=True)``
+    (the skipped-update branch of the in-scan ``lax.cond`` tap)."""
+    z = jnp.zeros((), jnp.float32)
+    return {"loss": z, "td_abs_mean": z, "td_abs_max": z, "q_mean": z,
+            "q_max": z, "target_div": z, "grad_norm": z}
+
+
+def ddqn_update(params, cfg: DDQNCfg, batch, *, lr=None, diag=False):
     """One minibatch step of Eq. (33); batch: {s, a, r, s1} with s/s1 the
-    gamma indices.  Returns (params, loss)."""
+    gamma indices.  Returns (params, loss).
+
+    ``diag=True`` (telemetry, DESIGN.md §15) instead returns
+    ``(params, metrics)`` with per-update diagnostics — TD-error stats,
+    Q-value mean/max, online/target divergence, gradient norm.  The
+    ``diag=False`` path is deliberately left byte-identical to the
+    pre-telemetry build."""
+    if diag:
+        return _ddqn_update_diag(params, cfg, batch, lr=lr)
     lr = cfg.lr if lr is None else lr
     s = _obs(batch["s"], cfg)
     s1 = _obs(batch["s1"], cfg)
@@ -96,6 +135,37 @@ def ddqn_update(params, cfg: DDQNCfg, batch, *, lr=None):
     return {"q": q_new,
             "q_target": soft_update(params["q_target"], q_new, cfg.kappa),
             "opt": opt_new}, loss
+
+
+def _ddqn_update_diag(params, cfg: DDQNCfg, batch, *, lr=None):
+    """``ddqn_update`` with the telemetry tap: same math, same update,
+    plus a diagnostics dict (keys pinned by ``ddqn_diag_zero``)."""
+    lr = cfg.lr if lr is None else lr
+    s = _obs(batch["s"], cfg)
+    s1 = _obs(batch["s1"], cfg)
+
+    def loss_fn(q):
+        qv = mlp_apply(q, s)                          # (B, 2^M)
+        y = jnp.take_along_axis(qv, batch["a"][:, None], axis=1)[:, 0]
+        a1 = jnp.argmax(mlp_apply(q, s1), axis=1)
+        q1 = mlp_apply(params["q_target"], s1)
+        y_hat = batch["r"] + cfg.rho * jnp.take_along_axis(
+            q1, a1[:, None], axis=1)[:, 0]
+        td = jax.lax.stop_gradient(y_hat) - y
+        return jnp.mean(0.5 * td ** 2), (td, qv)
+
+    (loss, (td, qv)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params["q"])
+    q_new, opt_new, _ = adam_update(grads, params["opt"], params["q"], lr=lr)
+    q_target_new = soft_update(params["q_target"], q_new, cfg.kappa)
+    metrics = {"loss": loss,
+               "td_abs_mean": jnp.mean(jnp.abs(td)),
+               "td_abs_max": jnp.max(jnp.abs(td)),
+               "q_mean": jnp.mean(qv),
+               "q_max": jnp.max(qv),
+               "target_div": _tree_diff_l2(q_new, q_target_new),
+               "grad_norm": _tree_l2(grads)}
+    return {"q": q_new, "q_target": q_target_new, "opt": opt_new}, metrics
 
 # Batched (per-env leading axis) init/update live behind the agent protocol:
 # repro.agents.vmap_agent generically lifts any Agent to B stacked learners
@@ -120,12 +190,16 @@ def ddqn_act_stacked(params, cfg: DDQNCfg, gamma_idx, keys, eps):
     return jnp.where(explore, rand, greedy).astype(jnp.int32)
 
 
-def ddqn_update_stacked(params, cfg: DDQNCfg, batch, *, lr=None):
+def ddqn_update_stacked(params, cfg: DDQNCfg, batch, *, lr=None, diag=False):
     """Fused ``ddqn_update`` over B stacked learners.  batch leaves carry
     a leading ``(B,)`` axis (each learner's own minibatch); ``lr`` is a
     python scalar or per-learner ``(B,)`` array.  Returns
     ``(params, loss)`` with per-learner losses ``(B,)`` exactly like
-    ``jax.vmap(ddqn_update)``."""
+    ``jax.vmap(ddqn_update)``.  ``diag=True`` returns ``(params,
+    metrics)`` with per-learner ``(B,)`` diagnostics instead (same key
+    set as ``ddqn_diag_zero``)."""
+    if diag:
+        return _ddqn_update_stacked_diag(params, cfg, batch, lr=lr)
     lr = cfg.lr if lr is None else lr
     s = _obs(batch["s"], cfg)
     s1 = _obs(batch["s1"], cfg)
@@ -149,3 +223,36 @@ def ddqn_update_stacked(params, cfg: DDQNCfg, batch, *, lr=None):
     return {"q": q_new,
             "q_target": soft_update(params["q_target"], q_new, cfg.kappa),
             "opt": opt_new}, loss
+
+
+def _ddqn_update_stacked_diag(params, cfg: DDQNCfg, batch, *, lr=None):
+    """``ddqn_update_stacked`` with the telemetry tap: per-learner (B,)
+    diagnostics alongside the same fused update."""
+    lr = cfg.lr if lr is None else lr
+    s = _obs(batch["s"], cfg)
+    s1 = _obs(batch["s1"], cfg)
+
+    def loss_fn(q):
+        qv = mlp_apply_stacked(q, s)                  # (B, n, 2^M)
+        y = jnp.take_along_axis(qv, batch["a"][..., None], axis=-1)[..., 0]
+        a1 = jnp.argmax(mlp_apply_stacked(q, s1), axis=-1)
+        q1 = mlp_apply_stacked(params["q_target"], s1)
+        y_hat = batch["r"] + cfg.rho * jnp.take_along_axis(
+            q1, a1[..., None], axis=-1)[..., 0]
+        td = jax.lax.stop_gradient(y_hat) - y         # (B, n)
+        per = jnp.mean(0.5 * td ** 2, axis=-1)        # (B,)
+        return jnp.sum(per), (per, td, qv)
+
+    (_, (loss, td, qv)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params["q"])
+    q_new, opt_new, _ = adam_update_stacked(grads, params["opt"],
+                                            params["q"], lr=lr)
+    q_target_new = soft_update(params["q_target"], q_new, cfg.kappa)
+    metrics = {"loss": loss,
+               "td_abs_mean": jnp.mean(jnp.abs(td), axis=-1),
+               "td_abs_max": jnp.max(jnp.abs(td), axis=-1),
+               "q_mean": jnp.mean(qv, axis=(1, 2)),
+               "q_max": jnp.max(qv, axis=(1, 2)),
+               "target_div": _tree_diff_l2_stacked(q_new, q_target_new),
+               "grad_norm": _tree_l2_stacked(grads)}
+    return {"q": q_new, "q_target": q_target_new, "opt": opt_new}, metrics

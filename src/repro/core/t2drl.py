@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional, Sequence
 
 import jax
@@ -47,11 +48,15 @@ import jax.numpy as jnp
 # import at module level; the factory dispatch is imported lazily inside
 # _agents so either package may be imported first without a cycle
 from repro.agents.base import FrameObs, SlotObs, vmap_agent
+from repro.obs.profiling import record_compile
+from repro.obs.taps import (ObsCfg, broadcast_diag, combine_updates,
+                            reduce_update_diag)
+from repro.obs.writer import progress_line
 from .baselines import GACfg
 from .buffers import (buffer_add, buffer_add_batch, buffer_add_many,
                       buffer_add_many_batch, buffer_add_many_stacked,
-                      buffer_init, buffer_sample, buffer_sample_batch,
-                      buffer_sample_stacked)
+                      buffer_init, buffer_occupancy, buffer_sample,
+                      buffer_sample_batch, buffer_sample_stacked)
 from .cache_policies import cache_state_init
 from .d3pg import D3PGCfg, d3pg_init
 from .ddqn import DDQNCfg, ddqn_init
@@ -123,6 +128,12 @@ class T2DRLCfg:
         Root PRNG seed for init and episode keys.
     ga : GACfg
         Genetic-algorithm parameters for the SCHRS baseline.
+    obs : ObsCfg
+        In-scan telemetry switches (DESIGN.md §15).  The default
+        (``enabled=False``) keeps every tap site a python-level no-op, so
+        the episode cores compile the exact pre-telemetry program; with
+        telemetry on, per-update learner diagnostics and replay occupancy
+        ride the history dict under ``"diag/..."`` keys.
     """
     env: EnvCfg = EnvCfg()
     allocator: str = "d3pg"     # d3pg | ddpg | schrs | rcars
@@ -145,6 +156,7 @@ class T2DRLCfg:
     L: int = 5                  # D3PG denoising steps
     seed: int = 0
     ga: GACfg = GACfg()
+    obs: ObsCfg = ObsCfg()      # telemetry taps (DESIGN.md §15)
 
     def d3pg_cfg(self) -> D3PGCfg:
         return D3PGCfg(state_dim=self.env.state_dim,
@@ -167,8 +179,10 @@ def _agents(cfg: T2DRLCfg):
     from repro.agents.cachers import make_cacher
     if cfg.updates_per_slot < 1:
         raise ValueError("updates_per_slot must be >= 1")
-    return (make_allocator(cfg.allocator, cfg.env, cfg.d3pg_cfg(), cfg.ga),
-            make_cacher(cfg.cacher, cfg.ddqn_cfg(), cfg.env))
+    diag = cfg.obs.learner_on
+    return (make_allocator(cfg.allocator, cfg.env, cfg.d3pg_cfg(), cfg.ga,
+                           diag=diag),
+            make_cacher(cfg.cacher, cfg.ddqn_cfg(), cfg.env, diag=diag))
 
 
 def t2drl_init(key, cfg: T2DRLCfg):
@@ -303,51 +317,58 @@ def _update_aux(step, mask):
     return aux
 
 
-def _slot_updates(alloc, cfg: T2DRLCfg, state, ks, step, aux_mask, sample):
+def _slot_updates(alloc, cfg: T2DRLCfg, state, ks, step, aux_mask, sample,
+                  tap: bool = False):
     """``updates_per_slot`` sample+update steps of the allocator, shared by
     both episode cores (``sample(key) -> minibatch`` is the only part that
     differs).  N == 1 consumes ``ks[2]``/``ks[3]`` directly — the exact
     legacy per-slot key stream; N > 1 runs an inner ``lax.scan`` over
-    ``split(ks[2], N)`` / ``split(ks[3], N)`` (DESIGN.md §12)."""
+    ``split(ks[2], N)`` / ``split(ks[3], N)`` (DESIGN.md §12).
+
+    ``tap=True`` (telemetry, DESIGN.md §15) returns ``(state, metrics)`` —
+    the update's diagnostics dict, combined over the N inner updates —
+    instead of just ``state``."""
     def one(state, kk):
         k_samp, k_upd = kk
         batch = sample(k_samp)
-        state, _ = alloc.update(state,
+        state, m = alloc.update(state,
                                 {**batch, **_update_aux(step, aux_mask)},
                                 k_upd)
-        return state, None
+        return state, (m if tap else None)
     if cfg.updates_per_slot == 1:
-        state, _ = one(state, (ks[2], ks[3]))
-        return state
-    state, _ = jax.lax.scan(
+        state, m = one(state, (ks[2], ks[3]))
+        return (state, m) if tap else state
+    state, ms = jax.lax.scan(
         one, state, (jax.random.split(ks[2], cfg.updates_per_slot),
                      jax.random.split(ks[3], cfg.updates_per_slot)))
-    return state
+    return (state, combine_updates(ms)) if tap else state
 
 
 def _slot_updates_stacked(alloc, cfg: T2DRLCfg, state, ks, step, aux_mask,
-                          sample):
+                          sample, tap: bool = False):
     """Fused-core counterpart of :func:`_slot_updates`: ``alloc`` is the
     stacked agent, ``ks`` the per-cell key quads ``(B, 4, 2)``, and
     ``sample(keys) -> minibatch`` draws every cell's own minibatch
     (``(B, n, ...)`` leaves) in one fused gather.  Key derivations mirror
-    the per-cell ``_slot_updates`` exactly (DESIGN.md §13)."""
+    the per-cell ``_slot_updates`` exactly (DESIGN.md §13).  ``tap=True``
+    returns ``(state, metrics)`` with per-learner ``(B,)``-leading
+    diagnostics."""
     def one(state, kk):
         k_samp, k_upd = kk                  # (B, 2) each
         batch = sample(k_samp)
-        state, _ = alloc.update(state,
+        state, m = alloc.update(state,
                                 {**batch, **_update_aux(step, aux_mask)},
                                 k_upd)
-        return state, None
+        return state, (m if tap else None)
     if cfg.updates_per_slot == 1:
-        state, _ = one(state, (ks[:, 2], ks[:, 3]))
-        return state
+        state, m = one(state, (ks[:, 2], ks[:, 3]))
+        return (state, m) if tap else state
     split_n = lambda k: jax.random.split(k, cfg.updates_per_slot)
-    state, _ = jax.lax.scan(
+    state, ms = jax.lax.scan(
         one, state,
         (jnp.moveaxis(jax.vmap(split_n)(ks[:, 2]), 1, 0),
          jnp.moveaxis(jax.vmap(split_n)(ks[:, 3]), 1, 0)))
-    return state
+    return (state, combine_updates(ms)) if tap else state
 
 
 # -- episode cores ------------------------------------------------------------
@@ -370,6 +391,10 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
     alloc, cacher = _agents(cfg)
     stateful = cacher.step_frame is not None   # classical cacher (§14);
     # python-static, so stateless methods compile the exact pre-§14 program
+    # telemetry taps (DESIGN.md §15): python-static, so with telemetry off
+    # (the default) the episode traces the exact pre-telemetry program
+    tap_a = train and alloc.diag_zero is not None
+    tap_c = train and cacher.diag_zero is not None
     models: ModelParams = ts["models"]
     cap_e = d3.buffer
     k_env, key = jax.random.split(key)
@@ -426,8 +451,20 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
                 # warmup therefore sees the buffer as of the frame start
                 k_in = g - t * env_cfg.K
                 stored = jnp.minimum(size0 + k_in + 1, cap_e)
+                pred = (stored > cfg.warmup) & (size0 > 0)
+                if tap_a:
+                    alloc_state, adiag = jax.lax.cond(
+                        pred,
+                        lambda st: _slot_updates(
+                            alloc, cfg, st, ks, step, mask,
+                            lambda k: buffer_sample(ebuf, k, d3.batch),
+                            tap=True),
+                        lambda st: (st, alloc.diag_zero()), alloc_state)
+                    return ((alloc_state, env1, s1),
+                            (slot_stats(r, m), item,
+                             (adiag, pred.astype(jnp.float32))))
                 alloc_state = jax.lax.cond(
-                    (stored > cfg.warmup) & (size0 > 0),
+                    pred,
                     lambda st: _slot_updates(
                         alloc, cfg, st, ks, step, mask,
                         lambda k: buffer_sample(ebuf, k, d3.batch)),
@@ -436,11 +473,15 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
 
         g_idx = t * env_cfg.K + jnp.arange(env_cfg.K)
         slot_keys = jax.random.split(kf[1], env_cfg.K)
-        reqs = None
+        reqs = adiag = None
         if alloc.learns:
             s = observe(env, env_cfg, models, mask)
-            (alloc_state, env, _), (stats, items) = jax.lax.scan(
-                slot_step, (alloc_state, env, s), (slot_keys, g_idx))
+            if tap_a:
+                (alloc_state, env, _), (stats, items, adiag) = jax.lax.scan(
+                    slot_step, (alloc_state, env, s), (slot_keys, g_idx))
+            else:
+                (alloc_state, env, _), (stats, items) = jax.lax.scan(
+                    slot_step, (alloc_state, env, s), (slot_keys, g_idx))
             ebuf = buffer_add_many(ebuf, items)
             reqs = items["req"]                           # (K, U)
         elif stateful:
@@ -457,6 +498,8 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
         r_frame = jnp.mean(stats["r"]) - storage_viol * env_cfg.Xi
         out = {"gamma": gamma_t, "a_int": a_int, "r_frame": r_frame,
                "slot": stats, "storage_viol": storage_viol}
+        if tap_a:
+            out["adiag"] = adiag               # ((K, ...) metrics, (K,) did)
         carry = ((alloc_state, ebuf, env) if alloc.learns else (env,))
         if stateful:
             carry = carry + (cstate,)
@@ -478,22 +521,30 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
 
     # DDQN frame transitions: (gamma_t, a_t, r_t, gamma_{t+1}) for t < T-1
     cacher_state, fbuf = ts["ddqn"], ts["fbuf"]
+    cdiag = None
     if cacher.learns and train:
         def add_and_update(carry, t):
             cacher_state, fbuf = carry
             item = {"s": frames["gamma"][t], "a": frames["a_int"][t],
                     "r": frames["r_frame"][t], "s1": frames["gamma"][t + 1]}
             fbuf = buffer_add(fbuf, item)
+            pred = fbuf["size"] > dq.batch
 
             def do_update(cs):
                 kb = jax.random.fold_in(key, t)
                 batch = buffer_sample(fbuf, kb, dq.batch)
-                cs, _ = cacher.update(cs, batch, kb)
-                return cs
-            cacher_state = jax.lax.cond(fbuf["size"] > dq.batch, do_update,
+                cs, m = cacher.update(cs, batch, kb)
+                return (cs, m) if tap_c else cs
+            if tap_c:
+                cacher_state, m = jax.lax.cond(
+                    pred, do_update,
+                    lambda cs: (cs, cacher.diag_zero()), cacher_state)
+                return ((cacher_state, fbuf),
+                        (m, pred.astype(jnp.float32)))
+            cacher_state = jax.lax.cond(pred, do_update,
                                         lambda cs: cs, cacher_state)
             return (cacher_state, fbuf), None
-        (cacher_state, fbuf), _ = jax.lax.scan(
+        (cacher_state, fbuf), cdiag = jax.lax.scan(
             add_and_update, (cacher_state, fbuf),
             jnp.arange(env_cfg.T - 1))
 
@@ -508,6 +559,14 @@ def _episode_core(ts, cfg: T2DRLCfg, key, step, *, train: bool = True,
         "deadline_viol": jnp.mean(slot["viol"]),
         "storage_viol": jnp.mean(frames["storage_viol"]),
     }
+    if tap_a:
+        stats.update(reduce_update_diag(*frames["adiag"], prefix="diag/"))
+    if tap_c:
+        stats.update(reduce_update_diag(*cdiag, prefix="diag/ddqn_"))
+    if train and cfg.obs.replay_on:
+        occ = {**buffer_occupancy(ebuf, "ebuf", capacity=d3.buffer),
+               **buffer_occupancy(fbuf, "fbuf", capacity=dq.buffer)}
+        stats.update({"diag/" + k: v for k, v in occ.items()})
     ts = {"models": models, "d3pg": alloc_state, "ddqn": cacher_state,
           "ebuf": ebuf, "fbuf": fbuf, "cache": cache_state}
     return ts, stats
@@ -536,6 +595,11 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
     dq = cfg.ddqn_cfg()
     alloc, cacher = _agents(cfg)
     stateful = cacher.step_frame is not None   # classical cacher (§14)
+    # telemetry taps (DESIGN.md §15): the shared learner takes ONE pooled
+    # update per slot/frame, so its diagnostics are scalars — broadcast to
+    # (B,) at episode end to match the per-cell stats layout
+    tap_a = train and alloc.diag_zero is not None
+    tap_c = train and cacher.diag_zero is not None
     models: ModelParams = ts["models"]
     cap_e = d3.buffer
     B = keys.shape[0]
@@ -608,22 +672,36 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
             if train:
                 k_in = g - t * env_cfg.K
                 stored = jnp.sum(jnp.minimum(size0 + k_in + 1, cap_e))
+                pred = (stored > cfg.warmup) & (jnp.min(size0) > 0)
+                sample = lambda k: pool(buffer_sample_batch(
+                    ebuf, jax.random.split(k, B), n_slot))
+                if tap_a:
+                    alloc_state, adiag = jax.lax.cond(
+                        pred,
+                        lambda st: _slot_updates(alloc, cfg, st, ks, step,
+                                                 row_masks, sample, tap=True),
+                        lambda st: (st, alloc.diag_zero()), alloc_state)
+                    return ((alloc_state, env1, s1),
+                            (slot_stats(r, m), item,
+                             (adiag, pred.astype(jnp.float32))))
                 alloc_state = jax.lax.cond(
-                    (stored > cfg.warmup) & (jnp.min(size0) > 0),
-                    lambda st: _slot_updates(
-                        alloc, cfg, st, ks, step, row_masks,
-                        lambda k: pool(buffer_sample_batch(
-                            ebuf, jax.random.split(k, B), n_slot))),
+                    pred,
+                    lambda st: _slot_updates(alloc, cfg, st, ks, step,
+                                             row_masks, sample),
                     lambda st: st, alloc_state)
             return (alloc_state, env1, s1), (slot_stats(r, m), item)
 
         g_idx = t * env_cfg.K + jnp.arange(env_cfg.K)
         slot_keys = jax.random.split(kf[1], env_cfg.K)
-        reqs = None
+        reqs = adiag = None
         if alloc.learns:
             s = observe_b(env)
-            (alloc_state, env, _), (stats, items) = jax.lax.scan(
-                slot_step, (alloc_state, env, s), (slot_keys, g_idx))
+            if tap_a:
+                (alloc_state, env, _), (stats, items, adiag) = jax.lax.scan(
+                    slot_step, (alloc_state, env, s), (slot_keys, g_idx))
+            else:
+                (alloc_state, env, _), (stats, items) = jax.lax.scan(
+                    slot_step, (alloc_state, env, s), (slot_keys, g_idx))
             # one batched write per frame per cell: (K, B, ...) -> (B, K, ...)
             ebuf = buffer_add_many_batch(
                 ebuf, jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), items))
@@ -642,6 +720,8 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
         r_frame = jnp.mean(stats["r"], axis=0) - storage_viol * env_cfg.Xi
         out = {"gamma": gamma_t, "a_int": a_int, "r_frame": r_frame,
                "slot": stats, "storage_viol": storage_viol}
+        if tap_a:
+            out["adiag"] = adiag               # ((K, ...) metrics, (K,) did)
         carry = ((alloc_state, ebuf, env) if alloc.learns else (env,))
         if stateful:
             carry = carry + (cstate,)
@@ -662,24 +742,31 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
         alloc_state, ebuf = ts["d3pg"], ts["ebuf"]
 
     cacher_state, fbuf = ts["ddqn"], ts["fbuf"]
+    cdiag = None
     if cacher.learns and train:
         def add_and_update(carry, t):
             cacher_state, fbuf = carry
             item = {"s": frames["gamma"][t], "a": frames["a_int"][t],
                     "r": frames["r_frame"][t], "s1": frames["gamma"][t + 1]}
             fbuf = buffer_add_batch(fbuf, item)
+            pred = jnp.sum(fbuf["size"]) > dq.batch
 
             def do_update(cs):
                 kb = jax.random.fold_in(key, t)
                 batch = pool(buffer_sample_batch(
                     fbuf, jax.random.split(kb, B), n_frame))
-                cs, _ = cacher.update(cs, batch, kb)
-                return cs
+                cs, m = cacher.update(cs, batch, kb)
+                return (cs, m) if tap_c else cs
+            if tap_c:
+                cacher_state, m = jax.lax.cond(
+                    pred, do_update,
+                    lambda cs: (cs, cacher.diag_zero()), cacher_state)
+                return ((cacher_state, fbuf),
+                        (m, pred.astype(jnp.float32)))
             cacher_state = jax.lax.cond(
-                jnp.sum(fbuf["size"]) > dq.batch, do_update,
-                lambda cs: cs, cacher_state)
+                pred, do_update, lambda cs: cs, cacher_state)
             return (cacher_state, fbuf), None
-        (cacher_state, fbuf), _ = jax.lax.scan(
+        (cacher_state, fbuf), cdiag = jax.lax.scan(
             add_and_update, (cacher_state, fbuf),
             jnp.arange(env_cfg.T - 1))
 
@@ -694,6 +781,22 @@ def _episode_core_shared(ts, cfg: T2DRLCfg, keys, step, *,
         "deadline_viol": jnp.mean(slot["viol"], axis=(0, 1)),
         "storage_viol": jnp.mean(frames["storage_viol"], axis=0),
     }
+    if tap_a or tap_c:
+        # the shared learner takes ONE pooled update per slot/frame, so its
+        # diagnostics are cell-agnostic — broadcast to a leading (B,) so
+        # the per-cell history layout stays uniform.
+        diag = {}
+        if tap_a:
+            diag.update(reduce_update_diag(*frames["adiag"], prefix="diag/"))
+        if tap_c:
+            diag.update(reduce_update_diag(*cdiag, prefix="diag/ddqn_"))
+        stats.update({k: jnp.broadcast_to(v, (B,) + v.shape)
+                      for k, v in diag.items()})
+    if train and cfg.obs.replay_on:
+        # per-cell buffers: size/fill already carry the (B,) axis
+        occ = {**buffer_occupancy(ebuf, "ebuf", capacity=d3.buffer),
+               **buffer_occupancy(fbuf, "fbuf", capacity=dq.buffer)}
+        stats.update({"diag/" + k: v for k, v in occ.items()})
     ts = {"models": models, "d3pg": alloc_state, "ddqn": cacher_state,
           "ebuf": ebuf, "fbuf": fbuf, "cache": cache_state}
     return ts, stats
@@ -750,6 +853,12 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
     alloc = vmap_agent(alloc0, impl="fused")
     cacher = vmap_agent(cacher0, impl="fused")
     stateful = cacher0.step_frame is not None  # classical cacher (§14)
+    # telemetry taps (DESIGN.md §15): python-static — off compiles the
+    # exact pre-telemetry program.  The fused gates are scalar (jnp.all),
+    # so one did flag covers all B learners; the zeros branch stacks the
+    # single-learner diag_zero to (B,) to match the stacked update metrics
+    tap_a = train and alloc0.diag_zero is not None
+    tap_c = train and cacher0.diag_zero is not None
     models: ModelParams = ts["models"]
     cap_e = d3.buffer
     B = keys.shape[0]
@@ -816,11 +925,22 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
                 # predicate of the vmapped reference
                 k_in = g - t * env_cfg.K
                 stored = jnp.minimum(size0 + k_in + 1, cap_e)
+                pred = jnp.all((stored > cfg.warmup) & (size0 > 0))
+                sample = lambda k: buffer_sample_stacked(ebuf, k, d3.batch)
+                if tap_a:
+                    alloc_state, adiag = jax.lax.cond(
+                        pred,
+                        lambda st_: _slot_updates_stacked(
+                            alloc, cfg, st_, ks, step, masks, sample,
+                            tap=True),
+                        lambda st_: (st_, broadcast_diag(
+                            alloc0.diag_zero(), B)), alloc_state)
+                    return ((alloc_state, env1, s1),
+                            (st, item, (adiag, pred.astype(jnp.float32))))
                 alloc_state = jax.lax.cond(
-                    jnp.all((stored > cfg.warmup) & (size0 > 0)),
+                    pred,
                     lambda st_: _slot_updates_stacked(
-                        alloc, cfg, st_, ks, step, masks,
-                        lambda k: buffer_sample_stacked(ebuf, k, d3.batch)),
+                        alloc, cfg, st_, ks, step, masks, sample),
                     lambda st_: st_, alloc_state)
             return (alloc_state, env1, s1), (st, item)
 
@@ -828,11 +948,15 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
         slot_keys = jnp.moveaxis(
             jax.vmap(lambda k: jax.random.split(k, env_cfg.K))(kf[:, 1]),
             1, 0)                                         # (K, B, 2)
-        reqs = None
+        reqs = adiag = None
         if alloc0.learns:
             s = observe_b(env)
-            (alloc_state, env, _), (stats, items) = jax.lax.scan(
-                slot_step, (alloc_state, env, s), (slot_keys, g_idx))
+            if tap_a:
+                (alloc_state, env, _), (stats, items, adiag) = jax.lax.scan(
+                    slot_step, (alloc_state, env, s), (slot_keys, g_idx))
+            else:
+                (alloc_state, env, _), (stats, items) = jax.lax.scan(
+                    slot_step, (alloc_state, env, s), (slot_keys, g_idx))
             # one fused write per frame: (K, B, ...) -> (B, K, ...)
             ebuf = buffer_add_many_stacked(
                 ebuf, jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), items))
@@ -853,6 +977,8 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
             r_frame = r_frame + shape_hit * jnp.mean(stats["hit"], axis=0)
         out = {"gamma": gamma_t, "a_int": a_int, "r_frame": r_frame,
                "slot": stats, "storage_viol": storage_viol}
+        if tap_a:
+            out["adiag"] = adiag           # ((K, B, ...) metrics, (K,) did)
         carry = ((alloc_state, ebuf, env) if alloc0.learns else (env,))
         if stateful:
             carry = carry + (cstate,)
@@ -875,25 +1001,33 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
         alloc_state, ebuf = ts["d3pg"], ts["ebuf"]
 
     cacher_state, fbuf = ts["ddqn"], ts["fbuf"]
+    cdiag = None
     if cacher0.learns and train:
         def add_and_update(carry, t):
             cacher_state, fbuf = carry
             item = {"s": frames["gamma"][t], "a": frames["a_int"][t],
                     "r": frames["r_frame"][t], "s1": frames["gamma"][t + 1]}
             fbuf = buffer_add_batch(fbuf, item)
+            pred = jnp.all(fbuf["size"] > dq.batch)
 
             def do_update(cs):
                 kb = jax.vmap(lambda k: jax.random.fold_in(k, t))(keyd)
                 batch = buffer_sample_stacked(fbuf, kb, dq.batch)
                 if "lr_ddqn" in step:
                     batch = {**batch, "lr": step["lr_ddqn"]}
-                cs, _ = cacher.update(cs, batch, kb)
-                return cs
-            cacher_state = jax.lax.cond(
-                jnp.all(fbuf["size"] > dq.batch), do_update,
-                lambda cs: cs, cacher_state)
+                cs, m = cacher.update(cs, batch, kb)
+                return (cs, m) if tap_c else cs
+            if tap_c:
+                cacher_state, m = jax.lax.cond(
+                    pred, do_update,
+                    lambda cs: (cs, broadcast_diag(cacher0.diag_zero(), B)),
+                    cacher_state)
+                return ((cacher_state, fbuf),
+                        (m, pred.astype(jnp.float32)))
+            cacher_state = jax.lax.cond(pred, do_update,
+                                        lambda cs: cs, cacher_state)
             return (cacher_state, fbuf), None
-        (cacher_state, fbuf), _ = jax.lax.scan(
+        (cacher_state, fbuf), cdiag = jax.lax.scan(
             add_and_update, (cacher_state, fbuf),
             jnp.arange(env_cfg.T - 1))
 
@@ -908,6 +1042,22 @@ def _episode_core_fused(ts, cfg: T2DRLCfg, keys, step, *,
         "deadline_viol": jnp.mean(slot["viol"], axis=(0, 1)),
         "storage_viol": jnp.mean(frames["storage_viol"], axis=0),
     }
+    if tap_a or tap_c:
+        # per-learner metric leaves reduce to (B,) / (B, L); the shared
+        # scalar `updates` counts are broadcast so every diag leaf leads
+        # with the cell axis
+        diag = {}
+        if tap_a:
+            diag.update(reduce_update_diag(*frames["adiag"], prefix="diag/"))
+        if tap_c:
+            diag.update(reduce_update_diag(*cdiag, prefix="diag/ddqn_"))
+        stats.update({k: (jnp.broadcast_to(v, (B,)) if v.ndim == 0 else v)
+                      for k, v in diag.items()})
+    if train and cfg.obs.replay_on:
+        # stacked buffers: size is already per-cell (B,)
+        occ = {**buffer_occupancy(ebuf, "ebuf", capacity=d3.buffer),
+               **buffer_occupancy(fbuf, "fbuf", capacity=dq.buffer)}
+        stats.update({"diag/" + k: v for k, v in occ.items()})
     ts = {"models": models, "d3pg": alloc_state, "ddqn": cacher_state,
           "ebuf": ebuf, "fbuf": fbuf, "cache": cache_state}
     return ts, stats
@@ -1001,13 +1151,26 @@ def _args_signature(tree):
 def _aot_episode_call(tag, jitted, static_kw, dyn_args, options):
     """Call ``jitted`` through the AOT cache with the given CPU compiler
     options; fall back to the plain jit path off-CPU, for ``options=None``,
-    or if the options are rejected (future jaxlib)."""
+    or if the options are rejected (future jaxlib).
+
+    Every compile — AOT cache miss or plain-jit cache growth — is reported
+    to the ``repro.obs.profiling`` recompile counter (DESIGN.md §15).  The
+    counter tag is namespaced per static config so distinct experiment
+    configs don't read as retraces of one another; within one config the
+    expected program count is two (full chunk + ragged remainder), and the
+    counter warns beyond that."""
+    statics = tuple(sorted(static_kw.items()))
+    full_tag = f"{tag}:{hash(statics) & 0xFFFFFFFF:08x}"
     if options is None or jax.default_backend() != "cpu":
-        return jitted(*dyn_args, **static_kw)
-    sig = ((tag,) + tuple(sorted(static_kw.items()))
-           + _args_signature(dyn_args))
+        before = jitted._cache_size()
+        out = jitted(*dyn_args, **static_kw)
+        if jitted._cache_size() > before:
+            record_compile(full_tag, repr(_args_signature(dyn_args)))
+        return out
+    sig = (tag,) + statics + _args_signature(dyn_args)
     compiled = _AOT_CACHE.get(sig)
     if compiled is None:
+        record_compile(full_tag, repr(_args_signature(dyn_args)))
         lowered = jitted.lower(*dyn_args, **static_kw)
         try:
             compiled = lowered.compile(compiler_options=options)
@@ -1246,10 +1409,26 @@ def _broadcast_mods(mods: Optional[ScenarioSchedule], num_envs: int):
         lambda x: jnp.broadcast_to(x, (num_envs,) + x.shape), mods)
 
 
+def _chunk_summary(stats):
+    """Host-side summary of one logical chunk's history for the telemetry
+    record: per-key means as python floats, except per-step diffusion
+    magnitudes (``*denoise_mag``) which keep their trailing chain axis as
+    an L-vector (mean over episodes/cells only)."""
+    out = {}
+    for k, v in stats.items():
+        if k.endswith("denoise_mag") and v.ndim >= 2:
+            out[k] = [float(x) for x in
+                      jnp.mean(v.reshape(-1, v.shape[-1]), axis=0)]
+        else:
+            out[k] = float(jnp.mean(v))
+    return out
+
+
 def train_t2drl(cfg: T2DRLCfg, *, episodes: Optional[int] = None,
                 num_envs: int = 1, user_counts: Optional[Sequence[int]] = None,
                 share_models: bool = False, log_every: int = 0,
-                callback=None, mods: Optional[ScenarioSchedule] = None):
+                callback=None, mods: Optional[ScenarioSchedule] = None,
+                writer=None):
     """Full training run over ``num_envs`` parallel edge cells (multi-seed).
 
     Parameters
@@ -1277,6 +1456,12 @@ def train_t2drl(cfg: T2DRLCfg, *, episodes: Optional[int] = None,
         ``repro.scenarios.build_scenario``.  Unbatched leaves are broadcast
         to all cells; per-cell leaves (leading ``(num_envs,)`` axis) give
         heterogeneous scenarios.
+    writer : repro.obs.MetricWriter, optional
+        Structured telemetry sink (DESIGN.md §15).  When given, a run
+        manifest is stamped once and a ``train_chunk`` record (episode
+        cursor, wall-clock, per-key chunk statistics) is emitted after
+        every logical chunk.  Purely host-side — the compiled programs
+        and results are identical with or without a writer.
 
     Returns
     -------
@@ -1297,18 +1482,40 @@ def train_t2drl(cfg: T2DRLCfg, *, episodes: Optional[int] = None,
             raise ValueError("user_counts must have one entry per env")
         masks = make_user_masks(cfg.env, user_counts)
     mods = _broadcast_mods(mods, num_envs)
+    if writer is not None:
+        writer.ensure_manifest(cfg, extra={"episodes": int(episodes),
+                                           "num_envs": int(num_envs)})
     chunk = episodes if not (log_every or callback) else (log_every or 1)
     chunks, ep0 = [], 0
     while ep0 < episodes:
         n = min(chunk, episodes - ep0)
-        ts, stats = run_training(ts, cfg, key, jnp.arange(ep0, ep0 + n),
-                                 masks, mods, train=True)
+        # ragged-tail fix (DESIGN.md §15): a final chunk of n < chunk used
+        # to trace a THIRD program per config (silent retrace).  Run the
+        # remainder as size-1 calls instead, so a chunked run compiles
+        # exactly two episode programs: chunk-sized and size-1.  Episode
+        # keys derive from absolute indices, so the split leaves results
+        # bit-identical.
+        sizes = [n] if n == chunk else [1] * n
+        t0 = time.perf_counter()
+        parts, e = [], ep0
+        for m in sizes:
+            ts, part = run_training(ts, cfg, key, jnp.arange(e, e + m),
+                                    masks, mods, train=True)
+            parts.append(part)
+            e += m
+        stats = (parts[0] if len(parts) == 1 else
+                 {k: jnp.concatenate([p[k] for p in parts])
+                  for k in parts[0]})
         chunks.append(stats)
+        if writer is not None:
+            jax.block_until_ready(stats)
+            writer.write("train_chunk", episode=ep0 + n,
+                         episodes=int(episodes),
+                         wall_s=time.perf_counter() - t0,
+                         stats=_chunk_summary(stats))
         if log_every:
             last = {k: float(jnp.mean(v[-1])) for k, v in stats.items()}
-            print(f"ep {ep0 + n:4d} reward {last['episode_reward']:9.2f} "
-                  f"hit {last['hit_ratio']:.3f} "
-                  f"G {last['utility']:7.2f}")
+            print(progress_line(ep0 + n, last))
         if callback is not None:
             for i in range(n):
                 callback(ep0 + i,

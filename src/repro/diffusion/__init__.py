@@ -2,4 +2,6 @@ from .schedule import DiffusionSchedule, make_schedule  # noqa: F401
 from .denoiser import (denoiser_init, denoiser_apply,  # noqa: F401
                        denoiser_apply_stacked, time_embedding)
 from .sampler import (reverse_sample, reverse_sample_actions,  # noqa: F401
-                      reverse_sample_actions_stacked, reverse_sample_stacked)
+                      reverse_sample_actions_stacked,
+                      reverse_sample_actions_stacked_stats,
+                      reverse_sample_actions_stats, reverse_sample_stacked)

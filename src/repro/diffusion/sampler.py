@@ -57,6 +57,35 @@ def reverse_sample_actions(p, sched: DiffusionSchedule, state, key,
     return 0.5 * (x0 + 1.0)
 
 
+def reverse_sample_actions_stats(p, sched: DiffusionSchedule, state, key,
+                                 action_dim: int):
+    """Telemetry variant of ``reverse_sample_actions``: additionally
+    returns ``{"denoise_mag": (L,)}`` — the mean |eps_hat| per reverse
+    step, ordered l = L .. 1 (chain direction, noisiest first) — emitted
+    as scan ys so the tap stays inside the compiled program.  Same PRNG
+    consumption and same x-update arithmetic as the plain sampler."""
+    L = sched.L
+    batch_shape = state.shape[:-1]
+    kx, ke = jax.random.split(key)
+    x_L = jax.random.normal(kx, batch_shape + (action_dim,))
+    noises = jax.random.normal(ke, (L,) + batch_shape + (action_dim,))
+
+    def step(x, inp):
+        l_rev, eps_noise = inp
+        eps_hat = denoiser_apply(p, x, (l_rev + 1).astype(jnp.float32), state)
+        alpha = sched.alphas[l_rev]
+        abar = sched.alpha_bars[l_rev]
+        btilde = sched.beta_tildes[l_rev]
+        mu = (x - (1 - alpha) / jnp.sqrt(1 - abar) * eps_hat) \
+            / jnp.sqrt(alpha)
+        x = mu + jnp.where(l_rev > 0, jnp.sqrt(btilde), 0.0) * eps_noise
+        return x, jnp.mean(jnp.abs(eps_hat))
+
+    ls = jnp.arange(L - 1, -1, -1)
+    x0, mag = jax.lax.scan(step, x_L, (ls, noises))
+    return 0.5 * (jnp.tanh(x0) + 1.0), {"denoise_mag": mag}
+
+
 def reverse_sample_stacked(p, sched: DiffusionSchedule, state, keys,
                            action_dim: int):
     """B fused reverse chains: one L-step scan denoises all B actors per
@@ -103,3 +132,40 @@ def reverse_sample_actions_stacked(p, sched: DiffusionSchedule, state, keys,
     """Stacked-learner action in [0, 1]^A; see ``reverse_sample_stacked``."""
     x0 = reverse_sample_stacked(p, sched, state, keys, action_dim)
     return 0.5 * (x0 + 1.0)
+
+
+def reverse_sample_actions_stacked_stats(p, sched: DiffusionSchedule, state,
+                                         keys, action_dim: int):
+    """Telemetry variant of ``reverse_sample_actions_stacked``: also
+    returns ``{"denoise_mag": (B, L)}`` — per-learner mean |eps_hat| per
+    reverse step, ordered l = L .. 1.  PRNG stream identical to the plain
+    stacked sampler."""
+    L = sched.L
+    batch_shape = state.shape[1:-1]
+    kk = jax.vmap(jax.random.split)(keys)                       # (B, 2, 2)
+    x_L = jax.vmap(
+        lambda k: jax.random.normal(k, batch_shape + (action_dim,)))(kk[:, 0])
+    noises = jax.vmap(
+        lambda k: jax.random.normal(
+            k, (L,) + batch_shape + (action_dim,)))(kk[:, 1])
+    noises = jnp.moveaxis(noises, 1, 0)                # (L, B, ..., A)
+
+    def step(x, inp):
+        l_rev, eps_noise = inp
+        eps_hat = denoiser_apply_stacked(
+            p, x, (l_rev + 1).astype(jnp.float32), state)
+        alpha = sched.alphas[l_rev]
+        abar = sched.alpha_bars[l_rev]
+        btilde = sched.beta_tildes[l_rev]
+        mu = (x - (1 - alpha) / jnp.sqrt(1 - abar) * eps_hat) \
+            / jnp.sqrt(alpha)
+        x = mu + jnp.where(l_rev > 0, jnp.sqrt(btilde), 0.0) * eps_noise
+        # per-learner mean over every non-B axis
+        mag = jnp.mean(jnp.abs(eps_hat),
+                       axis=tuple(range(1, eps_hat.ndim)))
+        return x, mag
+
+    ls = jnp.arange(L - 1, -1, -1)
+    x0, mag = jax.lax.scan(step, x_L, (ls, noises))    # mag: (L, B)
+    return (0.5 * (jnp.tanh(x0) + 1.0),
+            {"denoise_mag": jnp.moveaxis(mag, 0, 1)})  # (B, L)

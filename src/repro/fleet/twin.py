@@ -108,9 +108,12 @@ def _cell_episode(policy, tcfg: T2DRLCfg, fcfg: FleetCfg, models, key,
                   mask=None, mods=None):
     """One episode horizon of request-level serving for a single cell.
 
-    Returns ``(counts, hist, curves)``: scalar counters, the (hist_bins,)
-    latency histogram, and per-slot ``{backlog, depth}`` curves of shape
-    ``(T, K)``."""
+    Returns ``(counts, hist, curves, snaps)``: scalar counters, the
+    (hist_bins,) latency histogram, per-slot ``{backlog, depth}`` curves
+    of shape ``(T, K)``, and per-frame CUMULATIVE ``{counts, hist}``
+    snapshots (leaves lead with ``(T,)``) — the host diffs consecutive
+    snapshots into per-frame series (DESIGN.md §15), keeping the in-scan
+    accumulation additive and allocation-free."""
     env_cfg = tcfg.env
     M, U = env_cfg.M, env_cfg.U
     dt = env_cfg.tau / fcfg.ticks_per_slot
@@ -231,13 +234,14 @@ def _cell_episode(policy, tcfg: T2DRLCfg, fcfg: FleetCfg, models, key,
             slot_step, (env, qs, counts, hist),
             (jax.random.split(kf[1], env_cfg.K),
              t * env_cfg.K + jnp.arange(env_cfg.K)))
-        return (env, qs, counts, hist), ys
+        return (env, qs, counts, hist), (ys, {"counts": counts,
+                                              "hist": hist})
 
-    (_, qs, counts, hist), curves = jax.lax.scan(
+    (_, qs, counts, hist), (curves, snaps) = jax.lax.scan(
         frame_step, (env, qs0, counts0, hist0),
         (jax.random.split(key, env_cfg.T), jnp.arange(env_cfg.T)))
     counts["end_backlog"] = jnp.sum(qs["work"])
-    return counts, hist, curves
+    return counts, hist, curves, snaps
 
 
 @functools.partial(jax.jit, static_argnames=("tcfg", "fcfg"))
@@ -247,7 +251,8 @@ def fleet_run(policy, models, tcfg: T2DRLCfg, fcfg: FleetCfg, keys,
 
     ``policy`` is shared across cells (deployment: one trained policy
     serves the fleet); ``models``/``keys``/``masks``/``mods`` carry a
-    leading ``(C,)`` axis.  Returns per-cell ``(counts, hist, curves)``."""
+    leading ``(C,)`` axis.  Returns per-cell ``(counts, hist, curves,
+    snaps)``."""
     return jax.vmap(
         lambda mo, k, mk, md: _cell_episode(policy, tcfg, fcfg, mo, k,
                                             mask=mk, mods=md))(
@@ -285,7 +290,7 @@ def latency_quantiles(hist, hist_max: float, qs: Sequence[float] = (0.5,
 def simulate_fleet(ts, tcfg: T2DRLCfg, fcfg: FleetCfg = FleetCfg(), *,
                    num_cells: Optional[int] = None, seed: int = 0,
                    mods=None, user_counts: Optional[Sequence[int]] = None,
-                   policy=None, cell: int = 0):
+                   policy=None, cell: int = 0, writer=None, tags=None):
     """Deploy a trained (or restored) policy against request-level traffic.
 
     Parameters
@@ -320,6 +325,13 @@ def simulate_fleet(ts, tcfg: T2DRLCfg, fcfg: FleetCfg = FleetCfg(), *,
         this selects which cell's learner is deployed fleet-wide — the
         others are not consulted.  Ignored for shared-policy and
         unbatched states.
+    writer : repro.obs.MetricWriter, optional
+        Structured telemetry sink (DESIGN.md §15): one ``fleet_frame``
+        record per frame (latency quantiles, drop / SLO-violation rates,
+        mean backlog) plus a final ``fleet_summary``.  Purely host-side.
+    tags : dict, optional
+        Extra JSON-safe fields stamped on every emitted record (e.g.
+        ``{"method": ..., "scenario": ...}``).
 
     Returns
     -------
@@ -327,10 +339,10 @@ def simulate_fleet(ts, tcfg: T2DRLCfg, fcfg: FleetCfg = FleetCfg(), *,
         Fleet-level metrics: request counts and rates (``slo_viol_rate``,
         ``deadline_miss_rate``, ``drop_rate``), latency ``p50``/``p95``/
         ``p99`` + mean latency/wait, backlog stats and per-cell
-        ``backlog_curve`` (C, T*K), the summed histogram, simulated
-        seconds, wall seconds of this call and the derived
-        ``requests_per_min`` (call twice and read the second for a
-        compile-free sustained rate).
+        ``backlog_curve`` (C, T*K), the summed histogram, per-frame
+        series under ``"frames"``, simulated seconds, wall seconds of
+        this call and the derived ``requests_per_min`` (call twice and
+        read the second for a compile-free sustained rate).
     """
     models = ts["models"]
     batched = models.a1.ndim == 2
@@ -353,25 +365,67 @@ def simulate_fleet(ts, tcfg: T2DRLCfg, fcfg: FleetCfg = FleetCfg(), *,
     mods = _broadcast_mods(mods, num_cells)
     keys = _batch_keys(jax.random.PRNGKey(seed), num_cells)
     t0 = time.perf_counter()
-    counts, hist, curves = jax.block_until_ready(
+    counts, hist, curves, snaps = jax.block_until_ready(
         fleet_run(pol, models, tcfg, fcfg, keys, masks, mods))
     wall = time.perf_counter() - t0
-    return summarize_fleet(counts, hist, curves, tcfg, fcfg, wall)
+    out = summarize_fleet(counts, hist, curves, tcfg, fcfg, wall,
+                          snaps=snaps)
+    if writer is not None:
+        tags = tags or {}
+        writer.ensure_manifest(tcfg, extra={"fleet": dataclasses.asdict(fcfg),
+                                            **tags})
+        fr = out["frames"]
+        for i in range(len(fr["frame"])):
+            writer.write("fleet_frame",
+                         **{k: v[i] for k, v in fr.items()}, **tags)
+        skip = ("backlog_curve", "hist", "frames")
+        writer.write("fleet_summary",
+                     metrics={k: v for k, v in out.items()
+                              if k not in skip}, **tags)
+    return out
+
+
+def _frame_series(snaps, curves, fcfg: FleetCfg):
+    """Diff per-frame cumulative snapshots into fleet-level per-frame
+    series (host-side NumPy).  ``snaps`` leaves lead with ``(C, T)``."""
+    hist = np.asarray(snaps["hist"]).sum(axis=0)         # (T, bins) cumulative
+    hist = np.diff(hist, axis=0, prepend=np.zeros((1, hist.shape[1])))
+    cnt = {k: np.diff(np.asarray(v).sum(axis=0).astype(np.float64),
+                      prepend=0.0)
+           for k, v in snaps["counts"].items()}          # each (T,)
+    backlog = np.asarray(curves["backlog"])              # (C, T, K)
+    T = backlog.shape[1]
+    out = {"frame": list(range(T)), "p50_s": [], "p95_s": [], "p99_s": [],
+           "drop_rate": [], "slo_viol_rate": [], "mean_backlog_s": []}
+    for t in range(T):
+        q = latency_quantiles(hist[t], fcfg.hist_max)
+        out["p50_s"].append(q[0.5])
+        out["p95_s"].append(q[0.95])
+        out["p99_s"].append(q[0.99])
+        out["drop_rate"].append(
+            float(cnt["dropped"][t] / max(cnt["arrivals"][t], 1.0)))
+        out["slo_viol_rate"].append(
+            float(cnt["slo_viol"][t] / max(cnt["admitted"][t], 1.0)))
+        out["mean_backlog_s"].append(float(backlog[:, t].mean()))
+    return out
 
 
 def summarize_fleet(counts, hist, curves, tcfg: T2DRLCfg, fcfg: FleetCfg,
-                    wall_s: float):
-    """Reduce per-cell twin outputs to the fleet-level metric dict."""
+                    wall_s: float, snaps=None):
+    """Reduce per-cell twin outputs to the fleet-level metric dict.  With
+    ``snaps`` (per-frame cumulative snapshots from ``fleet_run``) the
+    result additionally carries ``"frames"`` — per-frame latency
+    quantiles, drop / SLO rates, and mean backlog series."""
     c = {k: float(np.sum(np.asarray(v))) for k, v in counts.items()}
     hist_all = np.sum(np.asarray(hist), axis=0)
     q = latency_quantiles(hist_all, fcfg.hist_max)
     backlog = np.asarray(curves["backlog"])          # (C, T, K)
     C = backlog.shape[0]
-    backlog = backlog.reshape(C, -1)
+    flat_backlog = backlog.reshape(C, -1)
     depth = np.asarray(curves["depth"]).reshape(C, -1)
     adm = max(c["admitted"], 1.0)
     sim_s = tcfg.env.T * tcfg.env.K * tcfg.env.tau
-    return {
+    out = {
         "num_cells": C,
         "sim_seconds": float(sim_s),
         "requests": c["arrivals"],
@@ -385,11 +439,14 @@ def summarize_fleet(counts, hist, curves, tcfg: T2DRLCfg, fcfg: FleetCfg,
         "mean_wait_s": c["wait_sum"] / adm,
         "p50_s": q[0.5], "p95_s": q[0.95], "p99_s": q[0.99],
         "end_backlog_s": c["end_backlog"],
-        "mean_backlog_s": float(backlog.mean()),
-        "peak_backlog_s": float(backlog.max()),
+        "mean_backlog_s": float(flat_backlog.mean()),
+        "peak_backlog_s": float(flat_backlog.max()),
         "peak_queue_depth": float(depth.max()),
-        "backlog_curve": backlog,
+        "backlog_curve": flat_backlog,
         "hist": hist_all,
         "wall_s": wall_s,
         "requests_per_min": c["arrivals"] / max(wall_s, 1e-9) * 60.0,
     }
+    if snaps is not None:
+        out["frames"] = _frame_series(snaps, curves, fcfg)
+    return out

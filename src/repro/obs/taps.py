@@ -1,0 +1,104 @@
+"""In-scan metric taps (DESIGN.md §15): jit/scan-safe learner diagnostics.
+
+A *tap* is an extra scan output carried alongside the training stats —
+per-update learner diagnostics (TD errors, Q values, gradient norms,
+denoising magnitudes) accumulated INSIDE the episode scans with no host
+callbacks.  Taps are gated by the static :class:`ObsCfg` carried on
+``T2DRLCfg``: with ``enabled=False`` (the default) every tap site is a
+python-level no-op and the episode cores trace the exact pre-telemetry
+program, so telemetry-off stays bit-identical to the prior build.
+
+The update scans gate learner steps behind ``lax.cond`` (warmup, buffer
+fill), so a tapped slot emits either the update's metric pytree or a
+matching zeros pytree (the agent's ``diag_zero``) plus a 0/1 ``did``
+flag.  :func:`reduce_update_diag` then collapses the per-slot streams to
+episode-level statistics — did-weighted means, masked maxima for keys
+ending in ``_max``, and the update count — under flat ``"diag/..."`` keys
+that ride the ordinary history dict.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsCfg:
+    """Static telemetry configuration (hashable — jit-static via T2DRLCfg).
+
+    Attributes
+    ----------
+    enabled : bool
+        Master switch.  ``False`` (default) keeps every tap site a
+        python-level no-op: the episode cores compile the exact
+        pre-telemetry program (the off-by-default guarantee of
+        DESIGN.md §15).
+    learner : bool
+        Per-update learner diagnostics — DDQN TD-error stats / Q values /
+        target-net divergence, D3PG critic loss / gradient norms /
+        per-step denoising magnitudes — accumulated inside the update
+        scans and reduced to per-episode ``"diag/..."`` history keys.
+    replay : bool
+        Replay-buffer occupancy (size and fill fraction of the slot and
+        frame buffers) at episode end.
+
+    Host-side concerns (file paths, writers) intentionally do NOT live
+    here: this object is hashed into the jit cache key, so it must carry
+    only trace-relevant switches.
+    """
+    enabled: bool = False
+    learner: bool = True
+    replay: bool = True
+
+    @property
+    def learner_on(self) -> bool:
+        return self.enabled and self.learner
+
+    @property
+    def replay_on(self) -> bool:
+        return self.enabled and self.replay
+
+
+def combine_updates(ms):
+    """Collapse the ``(N, ...)`` metric stream of an inner
+    ``updates_per_slot`` scan to one per-slot pytree: mean over the update
+    axis, except ``*_max`` keys which take the max (every inner update ran
+    unconditionally, so no ``did`` weighting is needed)."""
+    return {k: (jnp.max(v, axis=0) if k.endswith("_max")
+                else jnp.mean(v, axis=0))
+            for k, v in ms.items()}
+
+
+def reduce_update_diag(ms, did, prefix: str = "diag/"):
+    """Episode-level reduction of a tapped update stream.
+
+    ``ms`` is a flat dict of stacked per-slot metrics whose leaves carry
+    the scan axes first (e.g. ``(T, K)`` scalars or ``(T, K, B)`` /
+    ``(T, K, B, L)`` batched leaves); ``did`` is the matching 0/1
+    did-an-update flag of shape exactly the scan axes.  Returns flat
+    ``{prefix+k: value}`` entries: the did-weighted mean over the scan
+    axes per key (zero when no update ran), a did-masked max for keys
+    ending ``_max``, plus ``prefix+"updates"`` — the update count."""
+    did = jnp.asarray(did, jnp.float32)
+    axes = tuple(range(did.ndim))
+    n = jnp.sum(did)
+    out = {}
+    for k, v in ms.items():
+        w = did.reshape(did.shape + (1,) * (v.ndim - did.ndim))
+        if k.endswith("_max"):
+            masked = jnp.where(w > 0, v, -jnp.inf)
+            val = jnp.where(n > 0, jnp.max(masked, axis=axes), 0.0)
+        else:
+            val = jnp.sum(v * w, axis=axes) / jnp.maximum(n, 1.0)
+        out[prefix + k] = val
+    out[prefix + "updates"] = n
+    return out
+
+
+def broadcast_diag(diag_zero, B: int):
+    """Stack a single-learner ``diag_zero`` pytree to B learners (the
+    fused-core zeros branch of the update ``lax.cond``)."""
+    return jax.tree.map(lambda x: jnp.zeros((B,) + jnp.shape(x),
+                                            jnp.asarray(x).dtype), diag_zero)

@@ -88,6 +88,41 @@ def test_latency_quantiles_overflow_and_empty():
     assert np.isnan(latency_quantiles(np.zeros(4), 1.0, qs=(0.5,))[0.5])
 
 
+def test_latency_quantiles_single_interior_bucket():
+    # all mass in one interior bin: quantiles interpolate linearly
+    # within that bin's edges
+    hist = np.zeros(4)
+    hist[1] = 8.0                        # [1, 2) of [0, 4)
+    q = latency_quantiles(hist, 4.0, qs=(0.25, 0.5, 0.75))
+    assert q[0.25] == pytest.approx(1.25)
+    assert q[0.5] == pytest.approx(1.5)
+    assert q[0.75] == pytest.approx(1.75)
+
+
+def test_latency_quantiles_one_bin_histogram():
+    # a 1-bin histogram is all overflow: any mass reports hist_max;
+    # no mass still reports NaN, not hist_max
+    assert latency_quantiles(np.array([3.0]), 7.0, qs=(0.5,))[0.5] == 7.0
+    assert np.isnan(latency_quantiles(np.array([0.0]), 7.0, qs=(0.5,))[0.5])
+
+
+def test_frame_series_shapes_and_bounds(fleet_res):
+    """The per-frame telemetry series (DESIGN.md §15): one entry per
+    frame, rates in [0, 1], ordered quantiles where defined."""
+    fr = fleet_res["frames"]
+    assert fr["frame"] == list(range(ENV.T))
+    for k in ("p50_s", "p95_s", "p99_s", "drop_rate", "slo_viol_rate",
+              "mean_backlog_s"):
+        assert len(fr[k]) == ENV.T, k
+    for t in range(ENV.T):
+        assert 0.0 <= fr["drop_rate"][t] <= 1.0
+        assert 0.0 <= fr["slo_viol_rate"][t] <= 1.0
+        assert fr["mean_backlog_s"][t] >= 0.0
+        p50, p95, p99 = fr["p50_s"][t], fr["p95_s"][t], fr["p99_s"][t]
+        if not np.isnan(p50):            # NaN = no admissions this frame
+            assert p50 <= p95 <= p99
+
+
 # -- policy export ------------------------------------------------------------
 
 def test_export_policy_contents(ts_t2drl, ts_rcars):
